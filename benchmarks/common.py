@@ -1,0 +1,81 @@
+"""Shared benchmark infrastructure: trained router, pipelines, metrics."""
+from __future__ import annotations
+
+import functools
+import sys
+import os
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.hybridflow import Pipeline, MethodOutput
+from repro.core.profiler import train_default_router
+from repro.core.router import Router
+from repro.core.utility import UnifiedMetric
+from repro.data.tasks import (WorldModel, gen_benchmark, EDGE_PROFILE,
+                              CLOUD_PROFILE, SWAP_EDGE_PROFILE,
+                              SWAP_CLOUD_PROFILE)
+
+BENCHES = ("gpqa", "mmlu_pro", "aime24", "livebench_reasoning")
+N_QUERIES = int(os.environ.get("REPRO_BENCH_QUERIES", "150"))
+N_SEEDS = int(os.environ.get("REPRO_BENCH_SEEDS", "3"))
+
+
+@functools.lru_cache(maxsize=4)
+def shared_router(seed: int = 0) -> Router:
+    router, info = train_default_router(n_queries=300, epochs=120, seed=seed)
+    return router
+
+
+@functools.lru_cache(maxsize=8)
+def shared_pipeline(seed: int = 0, swap: bool = False) -> Pipeline:
+    if swap:
+        wm = WorldModel(SWAP_EDGE_PROFILE, SWAP_CLOUD_PROFILE, seed=seed)
+    else:
+        wm = WorldModel(seed=seed)
+    return Pipeline(wm=wm)
+
+
+def queries(bench: str, n: Optional[int] = None):
+    return gen_benchmark(bench, n or N_QUERIES)
+
+
+def seeded_runs(fn, n_seeds: int = None) -> Dict[str, float]:
+    """Run fn(seed) -> MethodOutput over seeds; mean/std of each metric."""
+    n_seeds = n_seeds or N_SEEDS
+    accs, lats, costs, offs = [], [], [], []
+    for s in range(n_seeds):
+        m = fn(s)
+        accs.append(m.accuracy)
+        lats.append(m.latency)
+        costs.append(m.api_cost)
+        offs.append(m.offload_rate)
+    return {
+        "acc": float(np.mean(accs)), "acc_std": float(np.std(accs)),
+        "lat": float(np.mean(lats)), "lat_std": float(np.std(lats)),
+        "api": float(np.mean(costs)), "api_std": float(np.std(costs)),
+        "offload": float(np.mean(offs)),
+    }
+
+
+def unified(acc, lat, api, *, edge_acc, edge_lat, min_c: float = 0.02):
+    um = UnifiedMetric(acc, lat, api)
+    c = um.normalized_cost(edge_latency=edge_lat)
+    u = um.utility(edge_acc, edge_lat) if c >= min_c else float("nan")
+    return c, u
+
+
+def print_csv(title: str, header: Sequence[str], rows: Sequence[Sequence]):
+    print(f"\n# {title}")
+    print(",".join(header))
+    for r in rows:
+        print(",".join(_fmt(x) for x in r))
+
+
+def _fmt(x):
+    if isinstance(x, float):
+        return f"{x:.4f}"
+    return str(x)

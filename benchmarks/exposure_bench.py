@@ -1,0 +1,31 @@
+"""Paper App. D.1: privacy exposure proxy E_cloud / Ē_cloud per method."""
+from __future__ import annotations
+
+from benchmarks import common as C
+from repro.core.exposure import mean_exposure
+
+
+def run(n_queries=None):
+    router = C.shared_router()
+    pipe = C.shared_pipeline(0)
+    qs = C.queries("gpqa", n_queries)
+    arms = {
+        "edge-only": pipe.cot(qs, "edge"),
+        "cloud-only": pipe.cot(qs, "cloud"),
+        "dot": pipe.dot(qs, router),
+        "hybridflow": pipe.hybridflow(qs, router),
+    }
+    rows = []
+    for name, m in arms.items():
+        e, nbar = mean_exposure(m.results)
+        rows.append([name, e, nbar, 100 * m.accuracy])
+    return ["method", "e_cloud_tokens", "e_cloud_normalized", "acc_pct"], rows
+
+
+def main():
+    header, rows = run()
+    C.print_csv("exposure_proxy", header, rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Paper Fig. 3: edge/cloud execution counts per subtask position + the
+average adaptive threshold at each position (GPQA)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common as C
+
+
+def run(n_queries=None):
+    router = C.shared_router()
+    pipe = C.shared_pipeline(0)
+    qs = C.queries("gpqa", n_queries)
+    m = pipe.hybridflow(qs, router)
+    max_pos = 7
+    edge_cnt = np.zeros(max_pos, int)
+    cloud_cnt = np.zeros(max_pos, int)
+    tau_sum = np.zeros(max_pos)
+    tau_n = np.zeros(max_pos, int)
+    for r in m.results:
+        # offload decisions in routing order; tau_trace aligned
+        for pos, (sid, choice) in enumerate(r.offload.items()):
+            if pos >= max_pos:
+                break
+            if choice:
+                cloud_cnt[pos] += 1
+            else:
+                edge_cnt[pos] += 1
+        for pos, tau in enumerate(r.tau_trace[:max_pos]):
+            tau_sum[pos] += tau
+            tau_n[pos] += 1
+    rows = []
+    for pos in range(max_pos):
+        n = tau_n[pos]
+        rows.append([pos, int(edge_cnt[pos]), int(cloud_cnt[pos]),
+                     tau_sum[pos] / n if n else float("nan")])
+    return ["position", "edge_count", "cloud_count", "avg_threshold"], rows
+
+
+def main():
+    header, rows = run()
+    C.print_csv("fig3_offload_distribution", header, rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Paper Fig. 5 (App. D): intrinsic plan-quality across planner variants —
+five dimensions per planner, comparing a clean planner, the default noisy
+planner (Llama3.2-3B proxy), a heavily-corrupted planner (weak base model
+proxy), and the chain-only planner."""
+from __future__ import annotations
+
+from benchmarks import common as C
+from repro.core.plan_quality import mean_quality
+from repro.core.planner import SyntheticPlanner, CorruptionRates
+from benchmarks.table7_planner import ChainPlanner
+
+
+def run(n_queries=None):
+    qs = C.queries("gpqa", n_queries or 200)
+    planners = {
+        "oracle-planner": SyntheticPlanner(CorruptionRates(0, 0, 0, 0, 0, 0, 0)),
+        "default-planner": SyntheticPlanner(),
+        "weak-planner": SyntheticPlanner(CorruptionRates(
+            extra_cycle=0.2, drop_edge=0.25, double_generate=0.15,
+            bad_requires=0.2, oversize=0.1, garble_xml=0.1,
+            severe_garble=0.25)),
+        "chain-planner": ChainPlanner(),
+    }
+    rows = []
+    for name, pl in planners.items():
+        q = mean_quality(qs, pl)
+        rows.append([name, q["soundness"], q["dependency"], q["clarity"],
+                     q["attributes"], q["efficiency"], q["overall"]])
+    return ["planner", "soundness", "dependency_f1", "clarity",
+            "attributes", "efficiency", "overall"], rows
+
+
+def main():
+    header, rows = run()
+    C.print_csv("fig5_plan_quality", header, rows)
+
+
+if __name__ == "__main__":
+    main()

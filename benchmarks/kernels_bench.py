@@ -1,0 +1,83 @@
+"""Per-kernel timing: Pallas (interpret on CPU / compiled on TPU) vs the
+XLA reference path. Prints name,us_per_call,derived CSV."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common as C
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    on_tpu = jax.default_backend() == "tpu"
+    # modest shapes: interpret mode on CPU is a correctness harness, not perf
+    B, S, H, KV, hd = (4, 2048, 8, 2, 128) if on_tpu else (1, 256, 4, 2, 64)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32)
+    t_ref = _time(lambda: ref.attention_ref(q, k, v, causal=True))
+    t_pal = _time(lambda: ops.flash_attention(q, k, v, causal=True))
+    flops = 4 * B * H * S * S * hd / 2  # causal
+    rows.append(["flash_attention_ref", t_ref, f"{flops/t_ref*1e-3:.1f}GF/s"])
+    rows.append(["flash_attention_pallas", t_pal,
+                 "interpret" if not on_tpu else f"{flops/t_pal*1e-3:.1f}GF/s"])
+
+    M = 8192 if on_tpu else 1024
+    kc = jax.random.normal(ks[1], (B, M, KV, hd), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, M, KV, hd), jnp.float32)
+    qd = jax.random.normal(ks[0], (B, 1, H, hd), jnp.float32)
+    kvl = jnp.full((B,), M, jnp.int32)
+    t_ref = _time(lambda: ref.decode_attention_ref(qd, kc, vc, kvl))
+    t_pal = _time(lambda: ops.decode_attention(qd, kc, vc, kv_len=kvl))
+    rows.append(["decode_attention_ref", t_ref, f"M={M}"])
+    rows.append(["decode_attention_pallas", t_pal,
+                 "interpret" if not on_tpu else f"M={M}"])
+
+    # chunked GLA (Mamba2/mLSTM recurrence)
+    from repro.models.linear_recurrence import chunked_gla as gla_xla
+    B2, T, H2, D2 = (8, 4096, 8, 64) if on_tpu else (1, 128, 2, 16)
+    ks = jax.random.split(key, 4)
+    qg = jax.random.normal(ks[0], (B2, T, H2, D2), jnp.float32)
+    kg = jax.random.normal(ks[1], (B2, T, H2, D2), jnp.float32)
+    vg = jax.random.normal(ks[2], (B2, T, H2, D2), jnp.float32)
+    lag = -jax.nn.softplus(jax.random.normal(ks[3], (B2, T, H2)))
+    t_ref = _time(lambda: gla_xla(qg, kg, vg, lag, chunk=64)[0])
+    t_pal = _time(lambda: ops.chunked_gla(qg, kg, vg, lag, chunk=64))
+    rows.append(["chunked_gla_xla", t_ref, f"T={T}"])
+    rows.append(["chunked_gla_pallas", t_pal,
+                 "interpret" if not on_tpu else f"T={T}"])
+
+    x = jax.random.normal(key, (4096 if on_tpu else 512, 1024), jnp.float32)
+    s = jnp.ones((1024,))
+    t_ref = _time(lambda: ref.rmsnorm_ref(x, s))
+    t_pal = _time(lambda: ops.rmsnorm(x, s))
+    gbs = 2 * x.size * 4 / 1e9
+    rows.append(["rmsnorm_ref", t_ref, f"{gbs/(t_ref*1e-6):.1f}GB/s"])
+    rows.append(["rmsnorm_pallas", t_pal,
+                 "interpret" if not on_tpu else f"{gbs/(t_pal*1e-6):.1f}GB/s"])
+    return ["name", "us_per_call", "derived"], rows
+
+
+def main():
+    header, rows = run()
+    C.print_csv("kernels", header, rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Roofline analysis (deliverable g): reads launch/dryrun.py JSON records
+and derives the three per-(arch x shape x mesh) roofline terms:
+
+  compute_s    = HLO_FLOPs_per_chip / peak_FLOP/s        (197 TF bf16, v5e)
+  memory_s     = HLO_bytes_per_chip / HBM_bw             (819 GB/s)
+  collective_s = collective_bytes_per_chip / link_bw     (50 GB/s/link)
+
+FLOPs/bytes/collectives use the depth-extrapolated values (XLA counts scan
+bodies once — see dryrun._depth_variants); post-SPMD HLO shapes are
+per-chip, so no further division by chip count is needed. MODEL_FLOPS
+ratio flags recompute/redundancy waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from benchmarks import common as C
+from repro.launch.mesh import PEAK_FLOPS_BF16, HBM_BW, ICI_BW
+
+DRYRUN_DIR = os.environ.get(
+    "REPRO_DRYRUN_DIR",
+    os.path.join(os.path.dirname(__file__), "artifacts", "dryrun"))
+
+_ADVICE = {
+    "compute": "increase arithmetic efficiency: larger per-chip tiles, "
+               "bf16 everywhere, fuse elementwise chains into matmuls",
+    "memory": "cut HBM traffic: flash/blocked attention instead of "
+              "materialized scores, fewer remat passes, fused norms",
+    "collective": "re-shard: move the dominant collective off the critical "
+                  "path (overlap), or change axis mapping to shrink "
+                  "all-gather/all-to-all volume",
+}
+
+
+def load_records(dryrun_dir: str = DRYRUN_DIR) -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def roofline_row(rec: Dict) -> Optional[List]:
+    if rec.get("status") != "ok":
+        return None
+    cost = rec.get("cost_extrapolated") or rec["cost"]
+    coll = rec.get("collectives_extrapolated") or rec["collectives"]
+    flops = cost["flops"]
+    byts = cost["bytes_accessed"]
+    cbytes = coll["total"]
+    t_c = flops / PEAK_FLOPS_BF16
+    t_m = byts / HBM_BW
+    t_x = cbytes / ICI_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])[0]
+    model = rec["model_flops"] / rec["n_devices"]
+    useful = model / flops if flops else 0.0
+    hbm_gib = rec["memory"]["total_bytes"] / 2**30
+    return [rec["arch"], rec["shape"], rec["mesh"], t_c, t_m, t_x, dom,
+            useful, hbm_gib, _ADVICE[dom]]
+
+
+def run(dryrun_dir: str = DRYRUN_DIR):
+    """Roofline terms are single-pod only (the multi-pod records prove the
+    pod axis shards — they are compiled without depth extrapolation, so
+    their raw per-body costs are not comparable)."""
+    rows = []
+    skipped = []
+    multi_ok = multi_total = 0
+    for rec in load_records(dryrun_dir):
+        if rec.get("mesh") == "multi":
+            multi_total += 1
+            if rec.get("status") in ("ok", "skipped"):
+                multi_ok += 1
+            continue
+        if rec.get("status") == "skipped":
+            skipped.append([rec["arch"], rec["shape"], rec["mesh"],
+                            "-", "-", "-", "skipped", "-", "-",
+                            rec.get("reason", "")])
+            continue
+        row = roofline_row(rec)
+        if row:
+            rows.append(row)
+        elif rec.get("status") == "error":
+            rows.append([rec["arch"], rec["shape"], rec["mesh"],
+                         "-", "-", "-", "ERROR", "-", "-",
+                         rec.get("error", "")[:60]])
+    rows.extend(skipped)
+    if multi_total:
+        rows.append(["ALL", "ALL", "multi(2x16x16)", "-", "-", "-",
+                     f"{multi_ok}/{multi_total} lower+compile OK", "-", "-",
+                     "pod-axis sharding proof (see §Dry-run)"])
+    header = ["arch", "shape", "mesh", "compute_s", "memory_s",
+              "collective_s", "bottleneck", "useful_flops_ratio",
+              "hbm_gib_per_chip", "note"]
+    return header, rows
+
+
+def main():
+    header, rows = run()
+    C.print_csv("roofline", header, rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Paper Table 1: accuracy (% mean±std) of every method across the four
+reasoning benchmarks."""
+from __future__ import annotations
+
+from benchmarks import common as C
+
+
+def methods(pipe, router):
+    return {
+        "direct-edge": lambda qs: pipe.direct(qs, "edge"),
+        "direct-cloud": lambda qs: pipe.direct(qs, "cloud"),
+        "cot-edge": lambda qs: pipe.cot(qs, "edge"),
+        "cot-cloud": lambda qs: pipe.cot(qs, "cloud"),
+        "sot-edge": lambda qs: pipe.sot(qs, "edge"),
+        "sot-cloud": lambda qs: pipe.sot(qs, "cloud"),
+        "pasta-edge": lambda qs: pipe.pasta(qs, "edge"),
+        "pasta-cloud": lambda qs: pipe.pasta(qs, "cloud"),
+        "hybridllm": lambda qs: pipe.hybridllm(qs, router),
+        "dot": lambda qs: pipe.dot(qs, router),
+        "hybridflow": lambda qs: pipe.hybridflow(qs, router),
+    }
+
+
+def run_method(name: str, qs, seed: int, swap: bool = False):
+    pipe = C.shared_pipeline(seed, swap)
+    return methods(pipe, C.shared_router())[name](qs)
+
+
+def run(n_queries=None):
+    names = list(methods(C.shared_pipeline(0), C.shared_router()))
+    rows, per_bench = [], {}
+    for bench in C.BENCHES:
+        qs = C.queries(bench, n_queries)
+        for name in names:
+            stats = C.seeded_runs(
+                lambda s, name=name, qs=qs: run_method(name, qs, s))
+            per_bench.setdefault(name, []).append(stats["acc"])
+            rows.append([name, bench, 100 * stats["acc"],
+                         100 * stats["acc_std"]])
+    for name, accs in per_bench.items():
+        rows.append([name, "AVG", 100 * sum(accs) / len(accs), 0.0])
+    return ["method", "benchmark", "acc_pct", "acc_std"], rows
+
+
+def main():
+    header, rows = run()
+    C.print_csv("table1_accuracy", header, rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Paper Table 2: end-to-end latency C_time (s) and cloud API cost C_API
+per method across benchmarks."""
+from __future__ import annotations
+
+from benchmarks import common as C
+from benchmarks.table1_accuracy import methods, run_method
+
+
+def run(n_queries=None):
+    names = list(methods(C.shared_pipeline(0), C.shared_router()))
+    rows = []
+    agg = {}
+    for bench in C.BENCHES:
+        qs = C.queries(bench, n_queries)
+        for name in names:
+            stats = C.seeded_runs(
+                lambda s, name=name, qs=qs: run_method(name, qs, s))
+            agg.setdefault(name, []).append((stats["lat"], stats["api"]))
+            rows.append([name, bench, stats["lat"], stats["lat_std"],
+                         stats["api"]])
+    for name, vals in agg.items():
+        lat = sum(v[0] for v in vals) / len(vals)
+        api = sum(v[1] for v in vals) / len(vals)
+        rows.append([name, "AVG", lat, 0.0, api])
+    return ["method", "benchmark", "c_time_s", "c_time_std", "c_api_usd"], rows
+
+
+def main():
+    header, rows = run()
+    C.print_csv("table2_efficiency", header, rows)
+
+
+if __name__ == "__main__":
+    main()

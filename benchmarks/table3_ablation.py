@@ -1,0 +1,45 @@
+"""Paper Table 3: routing-strategy ablation on GPQA — offload rate,
+accuracy, latency, API cost, normalized cost c, unified utility u."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common as C
+
+
+def run(n_queries=None):
+    router = C.shared_router()
+    rows = []
+    arms = {
+        "edge": lambda p, qs: p.cot(qs, "edge"),
+        "cloud": lambda p, qs: p.cot(qs, "cloud"),
+        "random": lambda p, qs: p.random(qs, p=0.42),
+        "fixed-0.5": lambda p, qs: p.fixed(qs, router, 0.5),
+        "hybridflow-chain": lambda p, qs: p.hybridflow(qs, router, chain=True),
+        "hybridflow": lambda p, qs: p.hybridflow(qs, router),
+        "hybridflow+bandit": lambda p, qs: p.hybridflow(qs, router,
+                                                        calibrate=True),
+        # beyond-paper: per-query DP allocation on predicted utilities
+        "knapsack-dp": lambda p, qs: p.knapsack(qs, router, budget=0.5),
+    }
+    qs = C.queries("gpqa", n_queries)
+    edge_stats = C.seeded_runs(
+        lambda s: arms["edge"](C.shared_pipeline(s), qs))
+    for name, fn in arms.items():
+        stats = C.seeded_runs(lambda s, fn=fn: fn(C.shared_pipeline(s), qs))
+        c, u = C.unified(stats["acc"], stats["lat"], stats["api"],
+                         edge_acc=edge_stats["acc"],
+                         edge_lat=edge_stats["lat"])
+        rows.append([name, 100 * stats["offload"], 100 * stats["acc"],
+                     stats["lat"], stats["api"], c, u])
+    return ["method", "offload_pct", "acc_pct", "latency_s", "api_usd",
+            "norm_cost_c", "utility_u"], rows
+
+
+def main():
+    header, rows = run()
+    C.print_csv("table3_ablation_gpqa", header, rows)
+
+
+if __name__ == "__main__":
+    main()

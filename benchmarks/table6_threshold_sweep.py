@@ -1,0 +1,39 @@
+"""Paper Table 6 / Fig. 4: fixed offload threshold τ0 sweep on GPQA
+(sequential execution, as in the paper's sweep)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common as C
+
+
+def run(n_queries=None):
+    router = C.shared_router()
+    qs = C.queries("gpqa", n_queries)
+    edge = C.seeded_runs(lambda s: C.shared_pipeline(s).cot(qs, "edge"))
+    rows = []
+    for tau0 in (0.0, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0):
+        stats = C.seeded_runs(
+            lambda s, t=tau0: C.shared_pipeline(s).fixed(qs, router, t))
+        c, u = C.unified(stats["acc"], stats["lat"], stats["api"],
+                         edge_acc=edge["acc"], edge_lat=edge["lat"])
+        rows.append([tau0, 100 * stats["offload"], 100 * stats["acc"],
+                     stats["lat"], stats["api"], c, u])
+    # adaptive reference row (the paper's conclusion: beats any fixed τ0)
+    hf = C.seeded_runs(
+        lambda s: C.shared_pipeline(s).hybridflow(qs, router))
+    c, u = C.unified(hf["acc"], hf["lat"], hf["api"],
+                     edge_acc=edge["acc"], edge_lat=edge["lat"])
+    rows.append(["adaptive", 100 * hf["offload"], 100 * hf["acc"],
+                 hf["lat"], hf["api"], c, u])
+    return ["tau0", "offload_pct", "acc_pct", "latency_s", "api_usd",
+            "norm_cost_c", "utility_u"], rows
+
+
+def main():
+    header, rows = run()
+    C.print_csv("table6_threshold_sweep", header, rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Paper Table 8 (App. D.2): model-pair swap — Qwen2.5-7B-class edge +
+DeepSeek-V3-class cloud profiles, all pipeline logic unchanged."""
+from __future__ import annotations
+
+from benchmarks import common as C
+
+
+def run(n_queries=None):
+    router = C.shared_router()
+    qs = C.queries("gpqa", n_queries)
+    arms = {
+        "all-edge-cot": lambda p: p.cot(qs, "edge"),
+        "all-cloud-cot": lambda p: p.cot(qs, "cloud"),
+        "hybridllm": lambda p: p.hybridllm(qs, router),
+        "dot": lambda p: p.dot(qs, router),
+        "hybridflow": lambda p: p.hybridflow(qs, router),
+    }
+    rows = []
+    for name, fn in arms.items():
+        stats = C.seeded_runs(
+            lambda s, fn=fn: fn(C.shared_pipeline(s, swap=True)))
+        rows.append([name, 100 * stats["acc"], 1000 * stats["api"],
+                     stats["lat"]])
+    return ["method", "acc_pct", "api_cost_musd", "latency_s"], rows
+
+
+def main():
+    header, rows = run()
+    C.print_csv("table8_pair_swap", header, rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Quickstart: decompose a query into a DAG, train the utility router,
+and route subtasks between edge and cloud with the adaptive threshold.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.hybridflow import Pipeline
+from repro.core.planner import plan_to_xml
+from repro.core.profiler import train_default_router
+from repro.core.utility import UnifiedMetric
+from repro.data.tasks import gen_benchmark
+
+
+def main():
+    print("== 1. Offline: profile subtasks and warm-start the router ==")
+    router, info = train_default_router(n_queries=150, epochs=80)
+    print(f"   {info['n_samples']} profiled subtasks, final MSE "
+          f"{info['final_mse']:.4f}\n")
+
+    pipe = Pipeline()
+    query = gen_benchmark("gpqa", 3)[2]
+    print(f"== 2. Decompose: {query.text} ==")
+    dag, status = pipe.plan(query)
+    print(f"   plan status: {status}; XML:\n{plan_to_xml(dag)}\n")
+
+    print("== 3. Route and execute (dependency-triggered, budget-aware) ==")
+    out = pipe.hybridflow([query], router)
+    res = out.results[0]
+    for sid, r in sorted(res.results.items()):
+        where = "CLOUD" if r.routed_cloud else "edge "
+        print(f"   t{sid} -> {where}  correct={r.correct}  "
+              f"lat={r.latency:.2f}s  cost=${r.api_cost:.4f}")
+    print(f"   threshold trace: "
+          f"{[round(t, 3) for t in res.tau_trace]}")
+    print(f"   final: correct={res.final_correct}  makespan={res.latency:.2f}s"
+          f"  C_API=${res.api_cost:.4f}\n")
+
+    print("== 4. Compare against edge-only / cloud-only on 100 queries ==")
+    qs = gen_benchmark("gpqa", 100)
+    edge = pipe.cot(qs, "edge")
+    cloud = pipe.cot(qs, "cloud")
+    hf = pipe.hybridflow(qs, router)
+    for name, m in (("edge-only", edge), ("cloud-only", cloud),
+                    ("hybridflow", hf)):
+        um = UnifiedMetric(m.accuracy, m.latency, m.api_cost)
+        c = um.normalized_cost(edge_latency=edge.latency)
+        u = um.utility(edge.accuracy, edge.latency) if c > 0.02 else float("nan")
+        print(f"   {name:12s} acc={100*m.accuracy:5.1f}%  "
+              f"lat={m.latency:5.2f}s  api=${m.api_cost:.4f}  u={u:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""HybridFlow core — the paper's primary contribution.
+
+Dependency-aware DAG decomposition (dag, planner), utility-based
+budget-adaptive routing (utility, router, dual, bandit), dependency-
+triggered scheduling (scheduler), offline credit assignment (profiler),
+and the end-to-end pipeline with all paper baselines (hybridflow).
+"""
+from repro.core.dag import (PlanDAG, Node, validate, repair, chain_fallback,
+                            topological_order, critical_path_length,
+                            compression_ratio)
+from repro.core.planner import (SyntheticPlanner, parse_plan, plan_to_xml,
+                                decompose)
+from repro.core.router import Router, RouterConfig, train_router
+from repro.core.dual import DualController, TwoBudgetThreshold
+from repro.core.bandit import LinUCBCalibrator
+from repro.core.hybridflow import Pipeline, HybridFlowPolicy, MethodOutput
+from repro.core.profiler import train_default_router, profile_queries

@@ -1,0 +1,96 @@
+"""Intrinsic plan-quality evaluation (paper App. D / Fig. 5).
+
+Five dimensions scored in [0,1] against the query's latent ground-truth
+decomposition — the paper's "dual-faceted evaluation framework" intrinsic
+half (the extrinsic half is the end-to-end accuracy the benchmark tables
+already measure):
+
+  soundness    — node coverage of the ground-truth subtasks
+  dependency   — F1 of the plan's edge set vs the true edges
+  clarity      — executable descriptions (role-tagged, non-empty, bounded)
+  attributes   — difficulty-tier signal preserved in the descriptions
+  efficiency   — no redundant/filler nodes beyond the true decomposition
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Sequence
+
+import numpy as np
+
+from repro.core.dag import PlanDAG
+from repro.data.tasks import Query, _TIER_WORDS
+
+
+@dataclass(frozen=True)
+class PlanQuality:
+    soundness: float
+    dependency: float
+    clarity: float
+    attributes: float
+    efficiency: float
+
+    @property
+    def overall(self) -> float:
+        return float(np.mean([self.soundness, self.dependency, self.clarity,
+                              self.attributes, self.efficiency]))
+
+
+def _edge_set(dag: PlanDAG):
+    return {(d, nd.sid) for nd in dag.nodes for d in nd.deps}
+
+
+def score_plan(query: Query, dag: PlanDAG) -> PlanQuality:
+    true_ids = {st.sid for st in query.subtasks}
+    plan_ids = set(dag.sids)
+
+    # soundness: fraction of true subtasks present in the plan
+    soundness = len(true_ids & plan_ids) / max(len(true_ids), 1)
+
+    # dependency structure: edge F1 vs ground truth
+    true_edges = {(d, st.sid) for st in query.subtasks for d in st.deps}
+    plan_edges = _edge_set(dag)
+    tp = len(true_edges & plan_edges)
+    prec = tp / max(len(plan_edges), 1)
+    rec = tp / max(len(true_edges), 1)
+    dependency = 2 * prec * rec / max(prec + rec, 1e-9)
+
+    # clarity: role-tagged, non-trivial, bounded descriptions
+    def clear(nd):
+        d = nd.desc.strip()
+        return (len(d) >= 10 and len(d) <= 400
+                and nd.role in ("EXPLAIN", "ANALYZE", "GENERATE"))
+    clarity = float(np.mean([clear(nd) for nd in dag.nodes]))
+
+    # attribute accuracy: difficulty-tier words in the plan match the
+    # ground-truth subtask's tier (the router's input signal)
+    tier_of = {}
+    for st in query.subtasks:
+        tier_of[st.sid] = min(int(st.difficulty * len(_TIER_WORDS)),
+                              len(_TIER_WORDS) - 1)
+    hits, total = 0, 0
+    for nd in dag.nodes:
+        if nd.sid not in tier_of:
+            continue
+        total += 1
+        words = set(nd.desc.lower().split())
+        if words & set(_TIER_WORDS[tier_of[nd.sid]]):
+            hits += 1
+    attributes = hits / max(total, 1)
+
+    # efficiency: penalize nodes with no ground-truth counterpart
+    extra = len(plan_ids - true_ids)
+    efficiency = max(0.0, 1.0 - extra / max(len(plan_ids), 1))
+
+    return PlanQuality(soundness, dependency, clarity, attributes, efficiency)
+
+
+def mean_quality(queries: Sequence[Query], planner) -> Dict[str, float]:
+    dims = {k: [] for k in ("soundness", "dependency", "clarity",
+                            "attributes", "efficiency", "overall")}
+    for q in queries:
+        dag, _ = planner.plan(q)
+        pq = score_plan(q, dag)
+        for k in dims:
+            dims[k].append(getattr(pq, k) if k != "overall" else pq.overall)
+    return {k: float(np.mean(v)) for k, v in dims.items()}

@@ -1,0 +1,105 @@
+"""Utility router f_θ: 2-hidden-layer MLP on (z_i, C_used) (paper Eq. 8).
+
+Pure JAX; trained offline with AdamW + MSE against profiled utility
+targets (Eq. 9 / Eq. 26). Checkpoints via repro.training.checkpoint.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import embeddings as E
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclass(frozen=True)
+class RouterConfig:
+    in_dim: int = E.embedding_dim() + 1   # z_i ++ C_used(t)
+    hidden: int = 128
+    lr: float = 1e-4                      # paper: AdamW 1e-4
+    weight_decay: float = 0.01
+    epochs: int = 200
+    batch: int = 256
+    seed: int = 0
+
+
+def init_router(cfg: RouterConfig, key=None):
+    key = key if key is not None else jax.random.PRNGKey(cfg.seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    h = cfg.hidden
+
+    def lin(k, i, o):
+        return {"w": jax.random.normal(k, (i, o), jnp.float32) / np.sqrt(i),
+                "b": jnp.zeros((o,), jnp.float32)}
+
+    return {"l1": lin(k1, cfg.in_dim, h), "l2": lin(k2, h, h),
+            "l3": lin(k3, h, 1)}
+
+
+def router_apply(params, x):
+    """x [n, in_dim] -> û ∈ (0,1) [n]  (Eq. 8: sigmoid(f_θ))."""
+    h = jax.nn.relu(x @ params["l1"]["w"] + params["l1"]["b"])
+    h = jax.nn.relu(h @ params["l2"]["w"] + params["l2"]["b"])
+    out = h @ params["l3"]["w"] + params["l3"]["b"]
+    return jax.nn.sigmoid(out[..., 0])
+
+
+def make_features(z: np.ndarray, c_used: np.ndarray) -> np.ndarray:
+    """Concatenate embeddings with the budget-state feature."""
+    return np.concatenate([z, np.asarray(c_used, np.float32)[:, None]], axis=1)
+
+
+@jax.jit
+def _loss(params, x, y):
+    pred = router_apply(params, x)
+    return jnp.mean((pred - y) ** 2)
+
+
+def train_router(cfg: RouterConfig, feats: np.ndarray, targets: np.ndarray,
+                 *, log_every: int = 0) -> Tuple[Dict, list]:
+    """Offline warm-start (Eq. 9): MSE regression to profiled utilities."""
+    params = init_router(cfg)
+    ocfg = AdamWConfig(lr=cfg.lr, weight_decay=cfg.weight_decay,
+                       schedule="constant", grad_clip=1.0)
+    opt = adamw_init(params)
+    x = jnp.asarray(feats, jnp.float32)
+    y = jnp.asarray(targets, jnp.float32)
+    n = x.shape[0]
+    rng = np.random.default_rng(cfg.seed)
+    grad_fn = jax.jit(jax.value_and_grad(_loss))
+    history = []
+    for ep in range(cfg.epochs):
+        perm = rng.permutation(n)
+        tot = 0.0
+        for i in range(0, n, cfg.batch):
+            idx = perm[i:i + cfg.batch]
+            lv, g = grad_fn(params, x[idx], y[idx])
+            params, opt, _ = adamw_update(ocfg, g, opt, params)
+            tot += float(lv) * len(idx)
+        history.append(tot / n)
+        if log_every and ep % log_every == 0:
+            print(f"router epoch {ep}: mse {history[-1]:.5f}")
+    return params, history
+
+
+class Router:
+    """Inference-side wrapper: embeds subtask descriptions and predicts û."""
+
+    def __init__(self, params, cfg: Optional[RouterConfig] = None):
+        self.params = params
+        self.cfg = cfg or RouterConfig()
+        self._apply = jax.jit(router_apply)
+
+    def predict(self, descs: Sequence[str], c_used: float) -> np.ndarray:
+        if not descs:
+            return np.zeros(0, np.float32)
+        z = E.embed_texts(list(descs))
+        x = make_features(z, np.full(len(descs), c_used, np.float32))
+        return np.asarray(self._apply(self.params, jnp.asarray(x)))
+
+    def predict_one(self, desc: str, c_used: float) -> float:
+        return float(self.predict([desc], c_used)[0])

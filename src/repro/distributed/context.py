@@ -1,0 +1,27 @@
+"""Ambient mesh context: layers that need explicit SPMD (shard_map MoE)
+read the mesh here; drivers (dryrun/train/serve) set it around tracing."""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Optional
+
+_MESH = None
+
+
+def set_mesh(mesh) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh():
+    return _MESH
+
+
+@contextmanager
+def mesh_context(mesh):
+    old = get_mesh()
+    set_mesh(mesh)
+    try:
+        yield
+    finally:
+        set_mesh(old)

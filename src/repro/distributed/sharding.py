@@ -1,0 +1,232 @@
+"""GSPMD sharding rules for every architecture family.
+
+Parameter rules (DESIGN.md §5): column-parallel in-projections
+(P(None,"model")), row-parallel out-projections (P("model",None)),
+vocab-sharded embeddings, expert-sharded MoE weights when n_experts
+divides the model axis (else tensor-parallel inside experts). Every rule
+is divisibility-guarded: a dim that doesn't divide the axis size stays
+replicated (GSPMD would reject it otherwise).
+
+Leading stack axes ([n_layers, ...] from lax.scan stacking, [G, m, ...]
+for xLSTM groups) are detected by matching the rule to the *trailing*
+dims and padding the spec with None on the left.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, InputShape
+from repro.launch.mesh import data_axes, model_axis_size
+
+
+def _div(n: int, m: int) -> bool:
+    return m > 0 and n % m == 0
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+    return tuple(out)
+
+
+# projection weight classes by the *owning* parameter name
+_COL_PARALLEL = {"wq", "wk", "wv", "up", "w_in", "in_proj", "w_gate", "w_up"}
+_ROW_PARALLEL = {"wo", "down", "out_proj", "w_down", "out"}
+
+
+def param_spec(path, leaf, cfg: ModelConfig, mesh: Mesh) -> P:
+    ms = model_axis_size(mesh)
+    names = _path_names(path)
+    owner = names[-2] if len(names) >= 2 else names[-1]
+    name = names[-1]
+    shape = np.shape(leaf)
+    nd = len(shape)
+
+    def pad(spec_tail):
+        return P(*([None] * (nd - len(spec_tail)) + list(spec_tail)))
+
+    # --- embeddings ----------------------------------------------------
+    if owner in ("embed", "lm_head"):
+        V, D = shape[-2:]
+        return pad(["model" if _div(V, ms) else None, None])
+
+    # --- MoE expert banks [E, D, F] / [E, F, D] -------------------------
+    if "moe" in names and name in ("w_gate", "w_up", "w_down") and nd >= 3:
+        E = shape[-3]
+        if _div(E, ms):
+            return pad(["model", None, None])
+        # TP inside experts: shard the F dim
+        f_ax = -1 if name != "w_down" else -2
+        if _div(shape[f_ax], ms):
+            tail = [None, None, None]
+            tail[f_ax] = "model"
+            return pad(tail)
+        return pad([None, None, None])
+    if "moe" in names and name == "router":
+        return pad([None] * nd)
+
+    # --- sLSTM block-diagonal recurrent weights [H, P, 4P] ---------------
+    if name == "r" and nd >= 3:
+        return pad(["model" if _div(shape[-3], ms) else None, None, None])
+
+    # --- depthwise conv [K, C] ------------------------------------------
+    if name == "conv_w":
+        return pad([None, "model" if _div(shape[-1], ms) else None])
+    if name == "conv_b":
+        return pad(["model" if _div(shape[-1], ms) else None])
+
+    # --- generic dense layers -------------------------------------------
+    if name == "w" and nd >= 2:
+        d_in, d_out = shape[-2:]
+        if owner in _COL_PARALLEL:
+            return pad([None, "model" if _div(d_out, ms) else None])
+        if owner in _ROW_PARALLEL:
+            return pad(["model" if _div(d_in, ms) else None, None])
+        if owner == "router":
+            return pad([None, None])
+        # router MLP / unknown dense: replicate
+        return pad([None, None])
+    if name == "b":
+        if owner in _COL_PARALLEL:
+            return pad(["model" if _div(shape[-1], ms) else None])
+        return pad([None])
+
+    # norms, gates, scalars (A_log, dt_bias, D, scale, bias, w_gates)
+    return P(*([None] * nd))
+
+
+_FSDP_MIN_ELEMS = 1 << 16   # don't FSDP-shard tiny params (norms, biases)
+
+
+def _fsdp_augment(spec: P, shape, dsz: int, dp) -> P:
+    """§Perf: additionally shard the largest still-replicated dim over the
+    data axes (FSDP/ZeRO-3 via GSPMD). Optimizer state mirrors the param
+    specs, so fp32 Adam moments shard the same way (ZeRO-1 for free)."""
+    import numpy as _np
+    if int(_np.prod(shape)) < _FSDP_MIN_ELEMS:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    # pick the largest unsharded, divisible dim
+    cands = [(shape[i], i) for i in range(len(shape))
+             if entries[i] is None and _div(shape[i], dsz)]
+    if not cands:
+        return spec
+    _, ax = max(cands)
+    entries[ax] = dp
+    return P(*entries)
+
+
+def param_shardings(cfg: ModelConfig, params, mesh: Mesh,
+                    strategy: str = "tp"):
+    """Pytree of NamedSharding matching ``params``.
+
+    strategy: "tp" (baseline tensor parallel, replicated over data axes)
+    or "fsdp" (additionally shard params/grads/optimizer state over the
+    data axes; §Perf memory optimization).
+    """
+    import math
+    dp = data_axes(mesh)
+    dsz = math.prod(mesh.shape[a] for a in dp)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        spec = param_spec(path, leaf, cfg, mesh)
+        if strategy == "fsdp":
+            spec = _fsdp_augment(spec, np.shape(leaf), dsz, dp)
+        specs.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# --------------------------------------------------------------------------
+# activations / inputs
+# --------------------------------------------------------------------------
+
+def batch_shardings(cfg: ModelConfig, batch, mesh: Mesh):
+    """Training/prefill batch dict: batch dim over the data axes."""
+    dp = data_axes(mesh)
+    import math
+    dsz = math.prod(mesh.shape[a] for a in dp)
+
+    def spec(path, leaf):
+        shape = np.shape(leaf)
+        tail = [None] * (len(shape) - 1)
+        lead = dp if _div(shape[0], dsz) else None
+        return NamedSharding(mesh, P(lead, *tail))
+
+    return jax.tree_util.tree_map_with_path(spec, batch)
+
+
+def cache_spec(path, leaf, *, dsz: int, ms: int, dp) -> P:
+    """PartitionSpec for one cache leaf (pure logic; testable without a
+    device mesh). Batch over data axes when divisible, otherwise
+    (long_500k batch=1) shard the sequence/window dim; head-ish dims go on
+    "model" when divisible."""
+    shape = np.shape(leaf)
+    nd = len(shape)
+    names = _path_names(path)
+    tail: list = [None] * nd
+    # attention caches: [L, B, M, KV, hd] / cross [L, B, enc, KV, hd]
+    if names and names[-1] in ("k", "v", "xk", "xv") and nd == 5:
+        L, B, Mx, KVh, hd = shape
+        tail = [None, None, None, None, None]
+        if _div(B, dsz):
+            tail[1] = dp
+            if _div(KVh, ms):
+                tail[3] = "model"
+            elif _div(hd, ms):
+                tail[4] = "model"
+        else:
+            # batch=1 long-context: context parallelism over the window
+            if _div(Mx, dsz):
+                tail[2] = dp
+            if _div(KVh, ms):
+                tail[3] = "model"
+            elif _div(hd, ms):
+                tail[4] = "model"
+        return P(*tail)
+    # recurrent states: find batch axis; shard one big inner dim on model
+    b_ax = None
+    for ax in range(nd):
+        if _div(shape[ax], dsz) and shape[ax] >= dsz and b_ax is None \
+                and ax < nd - 1 and shape[ax] <= 4096:
+            b_ax = ax
+            break
+    if b_ax is not None:
+        tail[b_ax] = dp
+    for ax in range(nd - 1, b_ax if b_ax is not None else -1, -1):
+        if ax != b_ax and _div(shape[ax], ms) and shape[ax] >= ms:
+            tail[ax] = "model"
+            break
+    return P(*tail)
+
+
+def cache_shardings(cfg: ModelConfig, cache, mesh: Mesh):
+    dp = data_axes(mesh)
+    ms = model_axis_size(mesh)
+    import math
+    dsz = math.prod(mesh.shape[a] for a in dp)
+
+    def spec(path, leaf):
+        return NamedSharding(mesh, cache_spec(path, leaf, dsz=dsz, ms=ms,
+                                              dp=dp))
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def token_shardings(shape_batch: int, mesh: Mesh):
+    dp = data_axes(mesh)
+    import math
+    dsz = math.prod(mesh.shape[a] for a in dp)
+    lead = dp if _div(shape_batch, dsz) else None
+    return (NamedSharding(mesh, P(lead, None)),   # token [B,1]
+            NamedSharding(mesh, P(lead)))          # pos [B]
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,40 @@
+"""Global switch between the jnp reference path and Pallas TPU kernels.
+
+On TPU, enable with ``set_use_pallas(True)`` (or REPRO_USE_PALLAS=1). On
+CPU the kernels run in interpret mode and are only used by the kernel
+tests/benchmarks; models default to the XLA path.
+"""
+from __future__ import annotations
+
+import os
+from contextlib import contextmanager
+
+_USE_PALLAS = os.environ.get("REPRO_USE_PALLAS", "0") == "1"
+_INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "")
+
+
+def use_pallas() -> bool:
+    return _USE_PALLAS
+
+
+def set_use_pallas(v: bool) -> None:
+    global _USE_PALLAS
+    _USE_PALLAS = bool(v)
+
+
+def interpret_mode() -> bool:
+    """Interpret unless explicitly disabled (real TPU)."""
+    if _INTERPRET:
+        return _INTERPRET == "1"
+    import jax
+    return jax.default_backend() != "tpu"
+
+
+@contextmanager
+def pallas_enabled(v: bool = True):
+    old = use_pallas()
+    set_use_pallas(v)
+    try:
+        yield
+    finally:
+        set_use_pallas(old)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: Optional[int] = None, q_offset: int = 0):
+    """q [B,Sq,H,hd]; k/v [B,Sk,KV,hd] -> [B,Sq,H,hd] (f32 softmax)."""
+    from repro.models.layers import attention
+    return attention(q, k, v, causal=causal, window=window, q_offset=q_offset)
+
+
+def decode_attention_ref(q, k, v, kv_len):
+    """q [B,1,H,hd]; k/v [B,M,KV,hd]; kv_len [B] -> [B,1,H,hd]."""
+    from repro.models.layers import attention
+    return attention(q, k, v, causal=False, kv_len=kv_len)
+
+
+def rmsnorm_ref(x, scale, *, eps: float = 1e-5):
+    from repro.models.layers import rms_norm
+    return rms_norm({"scale": scale}, x, eps)

@@ -1,0 +1,10 @@
+from repro.models.model import (  # noqa: F401
+    build_model,
+    init_params,
+    forward,
+    train_step_fn,
+    serve_prefill_fn,
+    serve_decode_fn,
+    input_specs,
+    init_cache,
+)

@@ -1,0 +1,116 @@
+"""Chunked gated linear recurrence — shared engine for Mamba2 (SSD) and mLSTM.
+
+Computes, for per-(batch, head) scalar decay gates a_t ∈ (0,1]:
+
+    S_t = a_t · S_{t-1} + k_t v_tᵀ          (state  [Dk, Dv])
+    y_t = q_t · S_t                          (output [Dv])
+
+in O(T·Dk·Dv) with chunked parallelism (the SSD / GLA algorithm):
+within a chunk of length C the quadratic "attention" form is used
+(L-masked q·kᵀ), across chunks the state is carried by a lax.scan.
+This is the TPU-native adaptation: intra-chunk work is MXU matmuls with
+C=chunk multiples of 128; the sequential dimension is T/C, not T.
+
+Shapes: q,k [B,T,H,Dk], v [B,T,H,Dv], log_a [B,T,H] (log decay, <= 0).
+Returns y [B,T,H,Dv] and final state [B,H,Dk,Dv].
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_gla(q, k, v, log_a, *, chunk: int = 128,
+                initial_state: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    B, T, H, Dk = q.shape
+    Dv = v.shape[-1]
+    C = min(chunk, T)
+    if T % C:
+        pad = C - T % C
+        zq = jnp.zeros((B, pad, H, Dk), q.dtype)
+        zv = jnp.zeros((B, pad, H, Dv), v.dtype)
+        q = jnp.concatenate([q, zq], axis=1)
+        k = jnp.concatenate([k, zq], axis=1)
+        v = jnp.concatenate([v, zv], axis=1)
+        log_a = jnp.concatenate([log_a, jnp.zeros((B, pad, H), log_a.dtype)], axis=1)
+        Tp = T + pad
+    else:
+        Tp = T
+    NC = Tp // C
+
+    # reshape to chunks: [B, NC, C, H, *]
+    qc = q.reshape(B, NC, C, H, Dk)
+    kc = k.reshape(B, NC, C, H, Dk)
+    vc = v.reshape(B, NC, C, H, Dv)
+    la = log_a.reshape(B, NC, C, H).astype(jnp.float32)
+
+    cum = jnp.cumsum(la, axis=2)              # within-chunk cumulative log decay
+    total = cum[:, :, -1]                      # [B,NC,H] full-chunk log decay
+
+    # Intra-chunk: y_intra[i] = sum_{j<=i} (prod_{j<k<=i} a_k) (q_i·k_j) v_j
+    #   decay(i,j) = exp(cum[i]-cum[j]) for j<=i (gate of token j itself is
+    #   applied to the *previous* state, so k_j enters undccayed at step j).
+    di = cum[:, :, :, None, :]                 # [B,NC,C,1,H] (i)
+    dj = cum[:, :, None, :, :]                 # [B,NC,1,C,H] (j)
+    idx = jnp.arange(C)
+    tri = idx[:, None] >= idx[None, :]         # i >= j
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(di - dj), 0.0)
+    qk = jnp.einsum("bnihd,bnjhd->bnijh", qc.astype(jnp.float32),
+                    kc.astype(jnp.float32))
+    att = qk * decay
+    y_intra = jnp.einsum("bnijh,bnjhd->bnihd", att, vc.astype(jnp.float32))
+
+    # Chunk summaries: state contribution of each chunk (decayed to chunk end)
+    #   S_chunk = sum_j exp(total - cum[j]) k_j v_jᵀ
+    kdec = kc.astype(jnp.float32) * jnp.exp(total[:, :, None] - cum)[..., None]
+    s_chunk = jnp.einsum("bnjhd,bnjhe->bnhde", kdec, vc.astype(jnp.float32))
+
+    # Scan chunk states: S_n = exp(total_n) S_{n-1} + s_chunk_n
+    if initial_state is None:
+        s0 = jnp.zeros((B, H, Dk, Dv), jnp.float32)
+    else:
+        s0 = initial_state.astype(jnp.float32)
+
+    def step(s, xs):
+        tot, sc = xs            # tot [B,H], sc [B,H,Dk,Dv]
+        s_new = jnp.exp(tot)[..., None, None] * s + sc
+        return s_new, s        # emit state *entering* the chunk
+
+    tot_sw = jnp.moveaxis(total, 1, 0)         # [NC,B,H]
+    sc_sw = jnp.moveaxis(s_chunk, 1, 0)        # [NC,B,H,Dk,Dv]
+    s_final, s_prev = jax.lax.scan(step, s0, (tot_sw, sc_sw))
+    s_prev = jnp.moveaxis(s_prev, 0, 1)        # [B,NC,H,Dk,Dv]
+
+    # Inter-chunk: y_inter[i] = exp(cum[i]) q_i · S_prev
+    qdec = qc.astype(jnp.float32) * jnp.exp(cum)[..., None]
+    y_inter = jnp.einsum("bnihd,bnhde->bnihe", qdec, s_prev)
+
+    y = (y_intra + y_inter).reshape(B, Tp, H, Dv)[:, :T]
+    return y.astype(v.dtype), s_final
+
+
+def gla_reference(q, k, v, log_a, *, initial_state=None):
+    """Sequential oracle for chunked_gla (tests)."""
+    B, T, H, Dk = q.shape
+    Dv = v.shape[-1]
+    s = (jnp.zeros((B, H, Dk, Dv), jnp.float32) if initial_state is None
+         else initial_state.astype(jnp.float32))
+    ys = []
+    for t in range(T):
+        a = jnp.exp(log_a[:, t].astype(jnp.float32))        # [B,H]
+        s = a[..., None, None] * s + jnp.einsum(
+            "bhd,bhe->bhde", k[:, t].astype(jnp.float32), v[:, t].astype(jnp.float32))
+        ys.append(jnp.einsum("bhd,bhde->bhe", q[:, t].astype(jnp.float32), s))
+    return jnp.stack(ys, axis=1).astype(v.dtype), s
+
+
+def gla_decode_step(state, q, k, v, log_a):
+    """One-token recurrent update. state [B,H,Dk,Dv]; q,k [B,H,Dk]; v [B,H,Dv]."""
+    a = jnp.exp(log_a.astype(jnp.float32))
+    s = a[..., None, None] * state.astype(jnp.float32) + jnp.einsum(
+        "bhd,bhe->bhde", k.astype(jnp.float32), v.astype(jnp.float32))
+    y = jnp.einsum("bhd,bhde->bhe", q.astype(jnp.float32), s)
+    return s, y.astype(v.dtype)

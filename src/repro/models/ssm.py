@@ -1,0 +1,251 @@
+"""Recurrent blocks: Mamba2 (SSD) and xLSTM (mLSTM / sLSTM).
+
+All sequence mixing is built on the chunked gated linear recurrence in
+``linear_recurrence.py`` (TPU-native: intra-chunk MXU matmuls, inter-chunk
+lax.scan), except sLSTM which is inherently sequential (lax.scan over T —
+that is the architecture's trait, kept faithful).
+
+Simplifications vs the source papers (recorded in DESIGN.md):
+  * xLSTM exponential-gate stabilizer (m-state) replaced by sigmoid input
+    gates — bounded, so no stabilizer is needed.
+  * mLSTM's pre-qk causal conv4 is omitted.
+  * Mamba2 uses a single B/C group shared across heads.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.linear_recurrence import chunked_gla, gla_decode_step
+
+
+# ==========================================================================
+# Mamba2 (SSD)
+# ==========================================================================
+
+def init_mamba2(key, cfg, *, dtype=jnp.float32):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    ks = jax.random.split(key, 4)
+    d_in = 2 * di + 2 * N + H  # z, x, B, C, dt
+    return {
+        "in_proj": L.dense_init(ks[0], cfg.d_model, d_in, dtype=dtype),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, di + 2 * N), dtype) * 0.1,
+        "conv_b": jnp.zeros((di + 2 * N,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),          # A = -exp(A_log) = -1
+        "dt_bias": jnp.full((H,), math.log(math.e - 1), jnp.float32),  # softplus->1
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": L.norm_init(di, dtype=dtype),
+        "out_proj": L.dense_init(ks[2], di, cfg.d_model, dtype=dtype),
+    }
+
+
+def _causal_depthwise_conv(x, w, b, *, state=None):
+    """x [B,T,D]; w [K,D]. Returns y [B,T,D] and new conv state [B,K-1,D]."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else state
+    return jax.nn.silu(y + b), new_state
+
+
+def _mamba2_split(p, cfg, u):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    zxbcdt = L.dense(p["in_proj"], u)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * N]
+    dt_pre = zxbcdt[..., di + di + 2 * N:]
+    return z, xbc, dt_pre
+
+
+def mamba2_forward(p, cfg, u, *, initial=None):
+    """u [B,T,D] -> y [B,T,D], cache (conv_state, ssm_state)."""
+    B, T, _ = u.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    z, xbc, dt_pre = _mamba2_split(p, cfg, u)
+    conv_state = None if initial is None else initial["conv"]
+    xbc, conv_state = _causal_depthwise_conv(xbc, p["conv_w"], p["conv_b"],
+                                             state=conv_state)
+    x = xbc[..., :di].reshape(B, T, H, P)
+    Bmat = xbc[..., di:di + N]                    # [B,T,N]
+    Cmat = xbc[..., di + N:]                      # [B,T,N]
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32) + p["dt_bias"])  # [B,T,H]
+    A = -jnp.exp(p["A_log"])                      # [H]
+    log_a = dt * A                                # [B,T,H]
+    k = jnp.broadcast_to(Bmat[:, :, None, :], (B, T, H, N))
+    q = jnp.broadcast_to(Cmat[:, :, None, :], (B, T, H, N))
+    v = x * dt[..., None].astype(x.dtype)         # dt-scaled input
+    ssm0 = None if initial is None else initial["ssm"]
+    y, ssm_state = chunked_gla(q, k, v, log_a, initial_state=ssm0)
+    y = y + p["D"][None, None, :, None].astype(y.dtype) * x
+    y = y.reshape(B, T, di)
+    y = L.rms_norm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return L.dense(p["out_proj"], y), {"conv": conv_state, "ssm": ssm_state}
+
+
+def mamba2_decode(p, cfg, u, cache):
+    """u [B,1,D]; cache {conv:[B,K-1,dconv], ssm:[B,H,N,P]} -> y, new cache."""
+    y, new_cache = mamba2_forward(p, cfg, u, initial=cache)
+    return y, new_cache
+
+
+def mamba2_init_cache(cfg, batch: int, dtype=jnp.float32):
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * N), dtype),
+        "ssm": jnp.zeros((batch, H, N, P), jnp.float32),
+    }
+
+
+# ==========================================================================
+# xLSTM — mLSTM block (matrix memory == gated linear attention)
+# ==========================================================================
+
+def init_mlstm(key, cfg, *, dtype=jnp.float32):
+    di = cfg.d_inner
+    H = cfg.n_heads
+    P = di // H
+    ks = jax.random.split(key, 6)
+    return {
+        "up": L.dense_init(ks[0], cfg.d_model, 2 * di, dtype=dtype),
+        "wq": L.dense_init(ks[1], di, di, dtype=dtype),
+        "wk": L.dense_init(ks[2], di, di, dtype=dtype),
+        "wv": L.dense_init(ks[3], di, di, dtype=dtype),
+        "w_gates": L.dense_init(ks[4], di, 2 * H, bias=True, dtype=dtype),
+        "down": L.dense_init(ks[5], di, cfg.d_model, dtype=dtype),
+        "norm": L.norm_init(di, dtype=dtype),
+    }
+
+
+def _mlstm_qkv(p, cfg, u):
+    B, T, _ = u.shape
+    di = cfg.d_inner
+    H = cfg.n_heads
+    P = di // H
+    up = L.dense(p["up"], u)
+    xi, zg = up[..., :di], up[..., di:]
+    q = L.dense(p["wq"], xi).reshape(B, T, H, P) / math.sqrt(P)
+    k = L.dense(p["wk"], xi).reshape(B, T, H, P)
+    v = L.dense(p["wv"], xi).reshape(B, T, H, P)
+    gates = L.dense(p["w_gates"], xi).astype(jnp.float32)
+    i_gate = jax.nn.sigmoid(gates[..., :H])           # [B,T,H]
+    log_f = jax.nn.log_sigmoid(gates[..., H:])        # log forget gate
+    k = k * i_gate[..., None].astype(k.dtype)
+    # append normalizer channel: v' = [v, 1] so y' = [Cq, n·q]
+    ones = jnp.ones(v.shape[:-1] + (1,), v.dtype)
+    v1 = jnp.concatenate([v, ones], axis=-1)
+    return q, k, v1, log_f, zg
+
+
+def _mlstm_out(p, cfg, y1, zg, B, T):
+    di = cfg.d_inner
+    H = cfg.n_heads
+    P = di // H
+    y, n = y1[..., :P], y1[..., P:]
+    h = y / jnp.maximum(jnp.abs(n), 1.0).astype(y.dtype)
+    h = h.reshape(B, T, di)
+    h = L.rms_norm(p["norm"], h, cfg.norm_eps) * jax.nn.silu(zg)
+    return L.dense(p["down"], h)
+
+
+def mlstm_forward(p, cfg, u, *, initial=None):
+    B, T, _ = u.shape
+    q, k, v1, log_f, zg = _mlstm_qkv(p, cfg, u)
+    s0 = None if initial is None else initial["state"]
+    y1, state = chunked_gla(q, k, v1, log_f, initial_state=s0)
+    return _mlstm_out(p, cfg, y1, zg, B, T), {"state": state}
+
+
+def mlstm_decode(p, cfg, u, cache):
+    B, T, _ = u.shape
+    q, k, v1, log_f, zg = _mlstm_qkv(p, cfg, u)
+    state, y1 = gla_decode_step(cache["state"], q[:, 0], k[:, 0], v1[:, 0],
+                                log_f[:, 0])
+    return _mlstm_out(p, cfg, y1[:, None], zg, B, T), {"state": state}
+
+
+def mlstm_init_cache(cfg, batch: int, dtype=jnp.float32):
+    di = cfg.d_inner
+    H = cfg.n_heads
+    P = di // H
+    return {"state": jnp.zeros((batch, H, P, P + 1), jnp.float32)}
+
+
+# ==========================================================================
+# xLSTM — sLSTM block (scalar memory, sequential)
+# ==========================================================================
+
+def init_slstm(key, cfg, *, dtype=jnp.float32):
+    D = cfg.d_model
+    H = cfg.n_heads
+    P = D // H
+    ks = jax.random.split(key, 3)
+    return {
+        "w_in": L.dense_init(ks[0], D, 4 * D, bias=True, dtype=dtype),
+        # block-diagonal recurrent weights per head: [H, P, 4P]
+        "r": jax.random.normal(ks[1], (H, P, 4 * P), dtype) / math.sqrt(P),
+        "norm": L.norm_init(D, dtype=dtype),
+        "out": L.dense_init(ks[2], D, D, dtype=dtype),
+    }
+
+
+def _slstm_cell(p, cfg, x_t, carry):
+    """x_t [B,4D] (pre-activations from input); carry (c,n,h) each [B,H,P]."""
+    D = cfg.d_model
+    H = cfg.n_heads
+    P = D // H
+    c, n, h = carry
+    rec = jnp.einsum("bhp,hpq->bhq", h, p["r"])          # [B,H,4P]
+    pre = x_t.reshape(-1, H, 4 * P) + rec
+    z, i, f, o = jnp.split(pre.astype(jnp.float32), 4, axis=-1)
+    z = jnp.tanh(z)
+    i = jax.nn.sigmoid(i)
+    f = jax.nn.sigmoid(f)
+    o = jax.nn.sigmoid(o)
+    c = f * c + i * z
+    n = f * n + i
+    h_new = o * c / jnp.maximum(n, 1.0)
+    return (c, n, h_new.astype(h.dtype))
+
+
+def slstm_forward(p, cfg, u, *, initial=None):
+    B, T, D = u.shape
+    H = cfg.n_heads
+    P = D // H
+    x_pre = L.dense(p["w_in"], u)                        # [B,T,4D]
+    if initial is None:
+        carry = (jnp.zeros((B, H, P), jnp.float32),
+                 jnp.zeros((B, H, P), jnp.float32),
+                 jnp.zeros((B, H, P), u.dtype))
+    else:
+        carry = (initial["c"], initial["n"], initial["h"])
+
+    def step(carry, x_t):
+        new = _slstm_cell(p, cfg, x_t, carry)
+        return new, new[2]
+
+    carry, hs = jax.lax.scan(step, carry, jnp.moveaxis(x_pre, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, T, D)
+    h = L.rms_norm(p["norm"], h, cfg.norm_eps)
+    y = L.dense(p["out"], h)
+    cache = {"c": carry[0], "n": carry[1], "h": carry[2]}
+    return y, cache
+
+
+def slstm_decode(p, cfg, u, cache):
+    return slstm_forward(p, cfg, u, initial=cache)
+
+
+def slstm_init_cache(cfg, batch: int, dtype=jnp.float32):
+    H = cfg.n_heads
+    P = cfg.d_model // H
+    return {
+        "c": jnp.zeros((batch, H, P), jnp.float32),
+        "n": jnp.zeros((batch, H, P), jnp.float32),
+        "h": jnp.zeros((batch, H, P), dtype),
+    }

@@ -1,0 +1,99 @@
+"""Checkpointing: pytree <-> directory of .npz shards + JSON manifest.
+
+No orbax dependency. Leaves are saved with their path-derived keys; restore
+validates structure and dtypes. Works for params, optimizer state, and the
+HybridFlow router head.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    return str(p)
+
+
+def save_checkpoint(path: str, tree, *, step: Optional[int] = None,
+                    shard_mb: int = 512) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+    manifest = {"step": step, "keys": {}, "shards": []}
+    shard, shard_bytes, shard_idx = {}, 0, 0
+
+    def flush():
+        nonlocal shard, shard_bytes, shard_idx
+        if not shard:
+            return
+        name = f"shard_{shard_idx:04d}.npz"
+        np.savez(os.path.join(path, name), **shard)
+        manifest["shards"].append(name)
+        shard_idx += 1
+        shard, shard_bytes = {}, 0
+
+    for k, v in sorted(flat.items()):
+        safe = re.sub(r"[^\w\[\]/.-]", "_", k)
+        manifest["keys"][k] = {"shard": shard_idx, "safe": safe,
+                               "shape": list(v.shape), "dtype": str(v.dtype)}
+        shard[safe] = v
+        shard_bytes += v.nbytes
+        if shard_bytes > shard_mb * 2 ** 20:
+            flush()
+    flush()
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def restore_checkpoint(path: str, template) -> Tuple[Any, Optional[int]]:
+    """Restore into the structure of ``template`` (shapes/dtypes validated)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    arrays: Dict[str, np.ndarray] = {}
+    loaded_shards = {}
+    for k, meta in manifest["keys"].items():
+        sh = manifest["shards"][meta["shard"]]
+        if sh not in loaded_shards:
+            loaded_shards[sh] = np.load(os.path.join(path, sh))
+        arrays[k] = loaded_shards[sh][meta["safe"]]
+    flat_t = _flatten(template)
+    if set(flat_t) != set(arrays):
+        missing = set(flat_t) ^ set(arrays)
+        raise ValueError(f"checkpoint structure mismatch: {sorted(missing)[:8]}")
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    keys = [
+        "/".join(_path_str(p) for p in path_)
+        for path_, _ in jax.tree_util.tree_flatten_with_path(template)[0]
+    ]
+    new_leaves = []
+    for key, leaf in zip(keys, leaves):
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(f"shape mismatch at {key}: {arr.shape} vs {np.shape(leaf)}")
+        new_leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return treedef.unflatten(new_leaves), manifest.get("step")
+
+
+def latest_checkpoint(root: str) -> Optional[str]:
+    if not os.path.isdir(root):
+        return None
+    cands = [d for d in os.listdir(root) if d.startswith("ckpt_")]
+    if not cands:
+        return None
+    return os.path.join(root, max(cands, key=lambda d: int(d.split("_")[1])))

@@ -1,0 +1,79 @@
+"""Training loop: jitted train step + host-side driver with checkpointing.
+
+``make_train_step(cfg)`` builds the pure step function the dry-run lowers
+on the production mesh; ``train(...)`` is the host driver used by
+examples/train_lm.py (single-device CPU in this container).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.training.optimizer import AdamWConfig, AdamWState, adamw_init, adamw_update
+from repro.training import checkpoint as CKPT
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    opt: AdamWConfig = field(default_factory=AdamWConfig)
+    remat: bool = False
+    remat_policy: Optional[str] = None   # None | "dots" | "nothing"
+    log_every: int = 10
+    ckpt_every: int = 0                  # 0 = disabled
+    ckpt_dir: str = "/tmp/repro_ckpt"
+
+
+def make_train_step(cfg: ModelConfig, tcfg: Optional[TrainConfig] = None
+                    ) -> Callable:
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    tcfg = tcfg or TrainConfig()
+
+    def step(params, opt_state: AdamWState, batch):
+        def loss(p):
+            return M.loss_fn(p, cfg, batch, remat=tcfg.remat,
+                             remat_policy=tcfg.remat_policy)
+
+        (lv, parts), grads = jax.value_and_grad(loss, has_aux=True)(params)
+        params, opt_state, om = adamw_update(tcfg.opt, grads, opt_state, params)
+        metrics = {"loss": lv, **parts, **om}
+        return params, opt_state, metrics
+
+    return step
+
+
+def init_train_state(cfg: ModelConfig, key, *, dtype=None):
+    params = M.init_params(cfg, key, dtype=dtype)
+    return params, adamw_init(params)
+
+
+def train(cfg: ModelConfig, data_iter: Iterator[Dict[str, Any]], *,
+          steps: int, tcfg: Optional[TrainConfig] = None, seed: int = 0,
+          dtype=jnp.float32, params=None, opt_state=None,
+          log_fn: Callable[[str], None] = print) -> Tuple[Any, AdamWState, list]:
+    tcfg = tcfg or TrainConfig()
+    key = jax.random.PRNGKey(seed)
+    if params is None:
+        params, opt_state = init_train_state(cfg, key, dtype=dtype)
+    step_fn = jax.jit(make_train_step(cfg, tcfg))
+    history = []
+    t0 = time.time()
+    for i in range(steps):
+        batch = next(data_iter)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if i % tcfg.log_every == 0 or i == steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = i
+            m["wall_s"] = time.time() - t0
+            history.append(m)
+            log_fn(f"step {i:5d} loss {m['loss']:.4f} ce {m['ce']:.4f} "
+                   f"gnorm {m['grad_norm']:.3f} lr {m['lr']:.2e}")
+        if tcfg.ckpt_every and i and i % tcfg.ckpt_every == 0:
+            CKPT.save_checkpoint(f"{tcfg.ckpt_dir}/ckpt_{i}",
+                                 {"params": params, "opt": opt_state}, step=i)
+    return params, opt_state, history

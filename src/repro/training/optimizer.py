@@ -1,0 +1,104 @@
+"""Optimizers from scratch (no optax): AdamW with decoupled weight decay,
+global-norm gradient clipping, and LR schedules. State is a pytree shaped
+like the params, so it shards identically under pjit.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray       # int32 scalar
+    mu: object              # first moment pytree
+    nu: object              # second moment pytree
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: str = "cosine"   # constant | cosine | linear_warmup_cosine
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def schedule_lr(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    if cfg.schedule == "constant":
+        return jnp.asarray(cfg.lr, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "linear_warmup_cosine" or cfg.schedule == "cosine":
+        t = jnp.clip((step - cfg.warmup_steps) /
+                     jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(math.pi * t))
+        frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+        return cfg.lr * warm * frac
+    raise ValueError(cfg.schedule)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype) if False else
+                        (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), p)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros(params), nu=zeros(params))
+
+
+def adamw_update(cfg: AdamWConfig, grads, state: AdamWState, params):
+    """Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = schedule_lr(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        st_dtype = m.dtype  # moments may be bf16 (§Perf opt_bf16)
+        m = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decay matrices only (norms/biases exempt)
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return newp, m.astype(st_dtype), v.astype(st_dtype)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step, new_m, new_v), {"grad_norm": gnorm, "lr": lr}
+
+
+def sgd_update(lr: float, grads, params):
+    """Plain SGD (used by the router warm-start tests)."""
+    return jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)
+                      ).astype(p.dtype), params, grads)

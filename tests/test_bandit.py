@@ -1,0 +1,50 @@
+"""LinUCB calibration head (Eq. 13-14)."""
+import numpy as np
+
+from repro.core.bandit import LinUCBCalibrator, reward
+
+
+def test_reward_eq14():
+    assert reward(0.3, 0.5, 0.2) == 0.3 - 0.5 * 0.2
+
+
+def test_warm_start_identity():
+    cal = LinUCBCalibrator(dim=2)
+    # prior θ0 = e1 -> ũ == û before any update
+    for u in (0.1, 0.5, 0.9):
+        assert abs(cal.calibrated(u, [0.0, 0.0]) - u) < 1e-9
+
+
+def test_ucb_exceeds_point_estimate():
+    cal = LinUCBCalibrator(dim=1, alpha_ucb=0.5)
+    assert cal.ucb(0.4, [0.2]) >= cal.calibrated(0.4, [0.2])
+
+
+def test_learns_linear_shift():
+    """True reward = 0.5·û + 0.2 + 0.3·s: after updates the calibrated
+    estimate tracks it much better than the uncalibrated û."""
+    rng = np.random.default_rng(0)
+    cal = LinUCBCalibrator(dim=1, ridge=1.0)
+    for _ in range(400):
+        u = rng.uniform(0, 1)
+        s = rng.uniform(-1, 1)
+        r = 0.5 * u + 0.2 + 0.3 * s + rng.normal(0, 0.01)
+        cal.update(u, [s], r)
+    errs_cal, errs_raw = [], []
+    for _ in range(100):
+        u = rng.uniform(0, 1)
+        s = rng.uniform(-1, 1)
+        true = np.clip(0.5 * u + 0.2 + 0.3 * s, 0, 1)
+        errs_cal.append(abs(cal.calibrated(u, [s]) - true))
+        errs_raw.append(abs(u - true))
+    assert np.mean(errs_cal) < 0.05
+    assert np.mean(errs_cal) < np.mean(errs_raw) / 3
+
+
+def test_partial_feedback_only_updates_on_offload():
+    cal = LinUCBCalibrator(dim=1)
+    A0 = cal.A.copy()
+    # no update call => state untouched (partial feedback contract)
+    _ = cal.calibrated(0.5, [0.1])
+    _ = cal.ucb(0.5, [0.1])
+    assert np.allclose(cal.A, A0)

@@ -1,0 +1,116 @@
+"""DAG validation / repair / metrics (paper Def. C.2, App. C)."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.dag import (Node, PlanDAG, validate, repair, chain_fallback,
+                            topological_order, critical_path_length,
+                            compression_ratio, N_MAX)
+
+
+def _chain(n=4):
+    nodes = []
+    for i in range(n):
+        role = "EXPLAIN" if i == 0 else ("GENERATE" if i == n - 1 else "ANALYZE")
+        deps = (i - 1,) if i else ()
+        nodes.append(Node(i, f"step {i}", role, deps,
+                          requires=tuple(f"r{d}" for d in deps),
+                          produces=(f"r{i}",)))
+    return PlanDAG(tuple(nodes))
+
+
+def test_valid_chain():
+    assert validate(_chain()).ok
+
+
+def test_chain_metrics():
+    d = _chain(5)
+    assert critical_path_length(d) == 5
+    assert compression_ratio(d) == 0.0
+
+
+def test_parallel_compression():
+    nodes = [
+        Node(0, "e", "EXPLAIN", (), produces=("r0",)),
+        Node(1, "a", "ANALYZE", (0,), requires=("r0",), produces=("r1",)),
+        Node(2, "a", "ANALYZE", (0,), requires=("r0",), produces=("r2",)),
+        Node(3, "g", "GENERATE", (1, 2), requires=("r1", "r2"), produces=("r3",)),
+    ]
+    d = PlanDAG(tuple(nodes))
+    assert validate(d).ok
+    assert critical_path_length(d) == 3
+    assert compression_ratio(d) == 0.25
+
+
+def test_cycle_detected_and_repaired():
+    nodes = list(_chain(4).nodes)
+    # add back-edge 3 -> 1 making a cycle
+    nodes[1] = Node(1, nodes[1].desc, "ANALYZE", (0, 3),
+                    requires=("r0", "r3"), produces=("r1",),
+                    confidence={0: 0.9, 3: 0.1})
+    d = PlanDAG(tuple(nodes))
+    assert not validate(d).ok
+    fixed, status = repair(d)
+    assert status in ("repaired", "fallback")
+    assert validate(fixed).ok
+
+
+def test_double_generate_repaired():
+    nodes = list(_chain(4).nodes)
+    nodes[1] = Node(1, "x", "GENERATE", (0,), requires=("r0",), produces=("r1",))
+    fixed, status = repair(PlanDAG(tuple(nodes)))
+    assert validate(fixed).ok
+    gens = [n for n in fixed.nodes if n.role == "GENERATE"]
+    assert len(gens) == 1
+
+
+def test_orphan_attached_to_root():
+    nodes = list(_chain(4).nodes)
+    nodes[2] = Node(2, "orphan", "ANALYZE", (), produces=("r2",))
+    fixed, status = repair(PlanDAG(tuple(nodes)))
+    assert validate(fixed).ok
+
+
+def test_oversize_truncated():
+    nodes = list(_chain(N_MAX).nodes)
+    nodes.append(Node(N_MAX, "extra", "ANALYZE", (0,), requires=("r0",),
+                      produces=(f"r{N_MAX}",)))
+    fixed, status = repair(PlanDAG(tuple(nodes)))
+    assert validate(fixed).ok
+    assert fixed.n <= N_MAX
+
+
+def test_chain_fallback_always_valid():
+    nodes = [Node(i, f"n{i}", "ANALYZE", (), produces=(f"r{i}",))
+             for i in range(5)]
+    fb = chain_fallback(PlanDAG(tuple(nodes)))
+    assert validate(fb).ok
+    assert compression_ratio(fb) == 0.0
+
+
+# ---- property: repair always terminates in a valid DAG or chain ---------
+
+@st.composite
+def random_plans(draw):
+    n = draw(st.integers(2, 9))
+    nodes = []
+    for i in range(n):
+        role = draw(st.sampled_from(["EXPLAIN", "ANALYZE", "GENERATE"]))
+        deps = tuple(draw(st.sets(st.integers(0, n - 1), max_size=3)))
+        req = tuple(f"r{d}" for d in deps if draw(st.booleans()))
+        extra_req = draw(st.booleans())
+        if extra_req:
+            req = req + ("r_phantom",)
+        nodes.append(Node(i, f"node {i}", role, deps, requires=req,
+                          produces=(f"r{i}",)))
+    return PlanDAG(tuple(nodes))
+
+
+@settings(max_examples=150, deadline=None)
+@given(random_plans())
+def test_repair_property(dag):
+    fixed, status = repair(dag)
+    assert status in ("valid", "repaired", "fallback")
+    v = validate(fixed)
+    assert v.ok, (status, v.errors)
+    # scheduler invariant: repaired plans are always executable
+    assert topological_order(fixed) is not None

@@ -1,0 +1,94 @@
+"""Dry-run accounting helpers (pure logic — no 512-device mesh needed).
+
+Importing repro.launch.dryrun sets XLA_FLAGS but jax is already
+initialized by conftest, so the env var has no effect here.
+"""
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+
+
+def _dr():
+    from repro.launch import dryrun
+    return dryrun
+
+
+def test_collective_bytes_parsing():
+    dr = _dr()
+    hlo = "\n".join([
+        "%ar = bf16[8,128]{1,0} all-reduce(%x), replica_groups=...",
+        "%ag = f32[4,64]{1,0} all-gather(%y), dimensions={0}",
+        "%t = (f32[16]{0}, f32[16]{0}) all-reduce(%a, %b), to_apply=add",
+        "%aa = bf16[2,2]{1,0} all-to-all(%z)",
+        "%cp = u32[10]{0} collective-permute(%w)",
+        "%noise = f32[999]{0} add(%p, %q)",
+        "%start = bf16[4]{0} all-reduce-start(%v)",
+    ])
+    out = dr.collective_bytes(hlo)
+    assert out["all-reduce"] == 8 * 128 * 2 + 2 * 16 * 4 + 4 * 2
+    assert out["all-gather"] == 4 * 64 * 4
+    assert out["all-to-all"] == 2 * 2 * 2
+    assert out["collective-permute"] == 10 * 4
+    assert out["total"] == sum(out[k] for k in
+                               ("all-gather", "all-reduce", "reduce-scatter",
+                                "all-to-all", "collective-permute"))
+
+
+def test_model_flops_scaling():
+    dr = _dr()
+    cfg = get_config("qwen2-1.5b")
+    f_train = dr.model_flops(cfg, SHAPES["train_4k"])
+    f_pref = dr.model_flops(cfg, SHAPES["prefill_32k"])
+    f_dec = dr.model_flops(cfg, SHAPES["decode_32k"])
+    # train = 3x forward at equal token count
+    assert abs(f_train / (2.0 * cfg.param_count() *
+                          SHAPES["train_4k"].global_batch *
+                          SHAPES["train_4k"].seq_len) - 3.0) < 1e-6
+    assert f_dec < f_pref < f_train
+
+
+def test_model_flops_moe_uses_active():
+    dr = _dr()
+    cfg = get_config("kimi-k2-1t-a32b")
+    f = dr.model_flops(cfg, SHAPES["decode_32k"])
+    assert f < 2.0 * cfg.param_count() * 128 * 0.2   # far below dense count
+
+
+def test_depth_variants_respect_family_granularity():
+    dr = _dr()
+    for arch, expect in (("qwen2-1.5b", (2, 4)),
+                         ("zamba2-7b", (6, 12)),
+                         ("xlstm-350m", (2, 4))):
+        cfg = get_config(arch)
+        (ca, a), (cb, b) = dr._depth_variants(cfg)
+        if cfg.family == "ssm":
+            g = cfg.mlstm_per_slstm + 1
+            assert (a, b) == (g, 2 * g)
+        else:
+            assert (a, b) == expect
+        assert ca.n_layers == a and cb.n_layers == b
+
+
+def test_depth_variants_encdec_scales_both_stacks():
+    dr = _dr()
+    cfg = get_config("whisper-medium")
+    (ca, a), (cb, b) = dr._depth_variants(cfg)
+    assert ca.n_encoder_layers == a and cb.n_encoder_layers == b
+
+
+def test_apply_opts():
+    dr = _dr()
+    cfg = get_config("mistral-large-123b")
+    c2, strat = dr.apply_opts(cfg, ["blocked_attn", "expand_kv", "fsdp"])
+    assert c2.attention_block_q == 512
+    assert c2.kv_cache_expand_heads == 16
+    assert strat == "fsdp"
+    # expand_kv refuses when head counts don't align
+    c3, _ = dr.apply_opts(get_config("xlstm-350m"), ["expand_kv"])
+    assert c3.kv_cache_expand_heads is None
+
+
+def test_extrapolate_linear():
+    dr = _dr()
+    assert dr._extrapolate(10.0, 20.0, 2, 4, 8) == 40.0

@@ -1,0 +1,58 @@
+"""Online dual thresholding (Eq. 10-11 / Eq. 27)."""
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.dual import DualController, TwoBudgetThreshold
+
+
+def test_lambda_increases_when_overspent():
+    d = DualController(eta=0.5, c_max=0.3)
+    lam0 = d.lam
+    d.update(c_used=0.8)
+    assert d.lam > lam0
+
+
+def test_lambda_projected_nonnegative():
+    d = DualController(eta=0.5, c_max=0.9, lam=0.1)
+    d.update(c_used=0.0)
+    assert d.lam >= 0.0
+
+
+def test_tau_clipped():
+    d = DualController(tau0=0.9, gamma=10.0, lam=5.0)
+    assert d.tau == 1.0
+
+
+def test_two_budget_eq27():
+    t = TwoBudgetThreshold(tau0=0.2, k_max=0.02, l_max=20.0)
+    t.spend(dk=0.01, dl=5.0)
+    # tau = 0.2 + 0.01/0.04 + 5/40 = 0.575
+    assert abs(t.tau - 0.575) < 1e-9
+
+
+def test_threshold_monotone_in_spend():
+    t = TwoBudgetThreshold()
+    taus = [t.tau]
+    for _ in range(10):
+        t.spend(dk=0.002, dl=1.0)
+        taus.append(t.tau)
+    assert all(b >= a for a, b in zip(taus, taus[1:]))
+    assert taus[-1] <= 1.0
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.floats(0.0, 0.3), min_size=1, max_size=40),
+       st.floats(0.05, 0.5), st.floats(0.05, 2.0))
+def test_dual_ascent_budget_compliance(costs, c_max, eta):
+    """Property: with the dual update, cumulative overspend pressure makes
+    λ grow at least linearly in the excess (projected subgradient)."""
+    d = DualController(eta=eta, c_max=c_max)
+    c_used = 0.0
+    for c in costs:
+        c_used += c
+        d.update(c_used)
+        assert d.lam >= 0.0
+    if c_used > c_max:
+        assert d.lam >= eta * (c_used - c_max) - 1e-9
+    assert 0.0 <= d.tau <= 1.0

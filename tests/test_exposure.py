@@ -1,0 +1,38 @@
+"""Privacy exposure proxy (App. D.1)."""
+import numpy as np
+
+from repro.core.exposure import exposure, mean_exposure
+from repro.core.hybridflow import Pipeline
+from repro.data.tasks import gen_benchmark
+
+
+def test_exposure_bounds_and_ordering():
+    pipe = Pipeline()
+    qs = gen_benchmark("gpqa", 40)
+    edge = pipe.cot(qs, "edge")
+    cloud = pipe.cot(qs, "cloud")
+    e_edge, n_edge = mean_exposure(edge.results)
+    e_cloud, n_cloud = mean_exposure(cloud.results)
+    assert e_edge == 0.0 and n_edge == 0.0
+    assert n_cloud == 1.0
+    assert e_cloud > 0
+
+
+def test_exposure_monotone_in_offload():
+    pipe = Pipeline()
+    qs = gen_benchmark("gpqa", 40)
+    prev = -1.0
+    for p in (0.0, 0.3, 0.7, 1.0):
+        m = pipe.random(qs, p=p)
+        _, nbar = mean_exposure(m.results)
+        assert nbar >= prev - 0.05   # noisy monotonicity
+        prev = nbar
+
+
+def test_exposure_single_query():
+    pipe = Pipeline()
+    q = gen_benchmark("gpqa", 1)[0]
+    res = pipe.cot([q], "cloud").results[0]
+    e, nbar = exposure(res)
+    assert e == sum(r.tok_in for r in res.results.values())
+    assert nbar == 1.0

@@ -1,0 +1,69 @@
+"""Rolling-buffer KV cache slot math (the subtle part of SWA serving)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import kvcache as KV
+
+
+def _kv(b, s, kv, hd, start=0):
+    return (jnp.arange(start, start + b * s * kv * hd, dtype=jnp.float32)
+            .reshape(b, s, kv, hd))
+
+
+def test_prefill_short_prompt_no_roll():
+    M = 8
+    ck = jnp.zeros((1, M, 1, 2))
+    k = _kv(1, 5, 1, 2)
+    ck2, _ = KV.write_prefill(ck, ck, k, k, window=M)
+    np.testing.assert_array_equal(np.asarray(ck2[:, :5]), np.asarray(k))
+
+
+def test_prefill_long_prompt_rolls_to_canonical_slots():
+    """Position p must land in slot p % M so decode eviction is correct."""
+    M, S = 4, 6
+    ck = jnp.zeros((1, M, 1, 1))
+    k = jnp.arange(S, dtype=jnp.float32).reshape(1, S, 1, 1)  # value = pos
+    ck2, _ = KV.write_prefill(ck, ck, k, k, window=M)
+    got = np.asarray(ck2)[0, :, 0, 0]
+    # kept positions 2..5; slot p % 4: pos2->2, pos3->3, pos4->0, pos5->1
+    np.testing.assert_array_equal(got, [4, 5, 2, 3])
+
+
+def test_decode_write_evicts_oldest():
+    M, S = 4, 6
+    ck = jnp.zeros((1, M, 1, 1))
+    k = jnp.arange(S, dtype=jnp.float32).reshape(1, S, 1, 1)
+    ck2, _ = KV.write_prefill(ck, ck, k, k, window=M)
+    # write pos=6 -> slot 6%4=2, evicting pos 2 (the oldest retained)
+    newk = jnp.full((1, 1, 1, 1), 6.0)
+    pos = jnp.asarray([6])
+    ck3, _ = KV.write_decode(ck2, ck2, newk, newk, pos, window=M)
+    got = sorted(np.asarray(ck3)[0, :, 0, 0].tolist())
+    assert got == [3, 4, 5, 6]
+
+
+def test_valid_len():
+    pos = jnp.asarray([0, 3, 10])
+    out = np.asarray(KV.valid_len(pos, max_len=4, window=4))
+    np.testing.assert_array_equal(out, [1, 4, 4])
+
+
+def test_expand_kv_identity_when_equal():
+    class Cfg:
+        kv_cache_expand_heads = None
+        n_kv_heads = 2
+    k = _kv(1, 3, 2, 4)
+    assert KV.expand_kv_for_cache(Cfg(), k) is k
+
+
+def test_expand_kv_repeats_heads():
+    class Cfg:
+        kv_cache_expand_heads = 4
+        n_kv_heads = 2
+    k = _kv(1, 3, 2, 4)
+    out = KV.expand_kv_for_cache(Cfg(), k)
+    assert out.shape == (1, 3, 4, 4)
+    np.testing.assert_array_equal(np.asarray(out[:, :, 0]),
+                                  np.asarray(out[:, :, 1]))
+    np.testing.assert_array_equal(np.asarray(out[:, :, 0]),
+                                  np.asarray(k[:, :, 0]))

@@ -1,0 +1,100 @@
+"""§Perf optimization knobs: numerical parity with the baselines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.models import layers as L
+
+
+def test_blocked_attention_model_parity():
+    cfg0 = get_config("internlm2-1.8b").reduced()
+    cfg1 = cfg0.variant(attention_block_q=8)
+    p = M.init_params(cfg0, jax.random.PRNGKey(0), dtype=jnp.float32)
+    batch = {"tokens": jnp.arange(64, dtype=jnp.int32).reshape(2, 32)
+             % cfg0.vocab_size}
+    l0, _ = M.forward(p, cfg0, batch)
+    l1, _ = M.forward(p, cfg1, batch)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l0),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_blocked_attention_swa_parity():
+    cfg0 = get_config("mixtral-8x7b").reduced().variant(
+        sliding_window=8, capacity_factor=8.0)
+    cfg1 = cfg0.variant(attention_block_q=8)
+    p = M.init_params(cfg0, jax.random.PRNGKey(1), dtype=jnp.float32)
+    batch = {"tokens": jnp.arange(48, dtype=jnp.int32).reshape(2, 24)
+             % cfg0.vocab_size}
+    l0, _ = M.forward(p, cfg0, batch)
+    l1, _ = M.forward(p, cfg1, batch)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l0),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_expand_kv_decode_parity():
+    cfg0 = get_config("mistral-large-123b").reduced().variant(n_kv_heads=2)
+    cfg1 = cfg0.variant(kv_cache_expand_heads=4)
+    key = jax.random.PRNGKey(0)
+    p = M.init_params(cfg0, key, dtype=jnp.float32)
+    B, S = 2, 12
+    toks = jax.random.randint(key, (B, S + 1), 0, cfg0.vocab_size)
+    out = {}
+    for name, cfg in (("base", cfg0), ("expand", cfg1)):
+        cache = M.init_cache(cfg, B, S + 8, dtype=jnp.float32)
+        _, cache = M.serve_prefill(p, cfg, {"tokens": toks[:, :S]}, cache)
+        lg, _ = M.serve_decode(p, cfg, toks[:, S:S + 1],
+                               jnp.full((B,), S, jnp.int32), cache)
+        out[name] = lg
+    np.testing.assert_allclose(np.asarray(out["expand"]),
+                               np.asarray(out["base"]), atol=1e-5)
+
+
+def test_carry_cache_decode_parity():
+    cfg0 = get_config("qwen2-1.5b").reduced()
+    cfg1 = cfg0.variant(carry_cache=True)
+    key = jax.random.PRNGKey(2)
+    p = M.init_params(cfg0, key, dtype=jnp.float32)
+    B, S = 2, 10
+    toks = jax.random.randint(key, (B, S + 1), 0, cfg0.vocab_size)
+    out = {}
+    for name, cfg in (("base", cfg0), ("carry", cfg1)):
+        cache = M.init_cache(cfg, B, S + 8, dtype=jnp.float32)
+        _, cache = M.serve_prefill(p, cfg, {"tokens": toks[:, :S]}, cache)
+        lg, c2 = M.serve_decode(p, cfg, toks[:, S:S + 1],
+                                jnp.full((B,), S, jnp.int32), cache)
+        out[name] = (lg, c2)
+    np.testing.assert_allclose(np.asarray(out["carry"][0]),
+                               np.asarray(out["base"][0]), atol=1e-5)
+    for a, b in zip(jax.tree.leaves(out["base"][1]),
+                    jax.tree.leaves(out["carry"][1])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_bf16_optimizer_moments():
+    from repro.training.optimizer import (AdamWConfig, AdamWState,
+                                          adamw_update)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    opt = AdamWState(step=jnp.zeros((), jnp.int32),
+                     mu={"w": jnp.zeros(2, jnp.bfloat16)},
+                     nu={"w": jnp.zeros(2, jnp.bfloat16)})
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, schedule="constant")
+    for _ in range(100):
+        grads = {"w": 2 * params["w"]}
+        params, opt, _ = adamw_update(cfg, grads, opt, params)
+    assert opt.mu["w"].dtype == jnp.bfloat16       # dtype preserved
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.1
+
+
+def test_knapsack_policy_runs():
+    from repro.core.hybridflow import Pipeline
+    from repro.core.profiler import train_default_router
+    router, _ = train_default_router(n_queries=60, epochs=30)
+    pipe = Pipeline()
+    from repro.data.tasks import gen_benchmark
+    qs = gen_benchmark("gpqa", 30)
+    m = pipe.knapsack(qs, router, budget=0.5)
+    assert 0.0 < m.offload_rate < 1.0
+    assert m.accuracy > 0.15

@@ -1,0 +1,51 @@
+"""Intrinsic plan-quality framework (App. D / Fig. 5)."""
+import numpy as np
+
+from repro.core.plan_quality import score_plan, mean_quality
+from repro.core.planner import SyntheticPlanner, CorruptionRates
+from repro.core.dag import chain_fallback
+from repro.data.tasks import gen_benchmark
+
+
+def test_oracle_plan_scores_perfect():
+    q = gen_benchmark("gpqa", 5)[3]
+    pl = SyntheticPlanner(CorruptionRates(0, 0, 0, 0, 0, 0, 0))
+    dag, status = pl.plan(q)
+    assert status == "valid"
+    pq = score_plan(q, dag)
+    assert pq.overall == 1.0
+
+
+def test_chain_plan_loses_dependency_score():
+    q = gen_benchmark("gpqa", 5)[3]
+    pl = SyntheticPlanner(CorruptionRates(0, 0, 0, 0, 0, 0, 0))
+    dag, _ = pl.plan(q)
+    chain = chain_fallback(dag)
+    pq_dag = score_plan(q, dag)
+    pq_chain = score_plan(q, chain)
+    assert pq_chain.dependency < pq_dag.dependency
+    assert pq_chain.soundness == 1.0      # nodes all present
+
+
+def test_quality_ordering_across_planners():
+    """More corruption => lower mean quality (monotone ordering)."""
+    qs = gen_benchmark("gpqa", 60)
+    clean = mean_quality(qs, SyntheticPlanner(
+        CorruptionRates(0, 0, 0, 0, 0, 0, 0)))
+    default = mean_quality(qs, SyntheticPlanner())
+    weak = mean_quality(qs, SyntheticPlanner(CorruptionRates(
+        extra_cycle=0.2, drop_edge=0.3, double_generate=0.2,
+        bad_requires=0.2, oversize=0.1, garble_xml=0.1, severe_garble=0.3)))
+    assert clean["overall"] >= default["overall"] >= weak["overall"]
+    assert clean["overall"] == 1.0
+
+
+def test_scores_bounded():
+    qs = gen_benchmark("aime24", 20)
+    pl = SyntheticPlanner()
+    for q in qs:
+        dag, _ = pl.plan(q)
+        pq = score_plan(q, dag)
+        for v in (pq.soundness, pq.dependency, pq.clarity, pq.attributes,
+                  pq.efficiency, pq.overall):
+            assert 0.0 <= v <= 1.0

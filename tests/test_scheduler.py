@@ -1,0 +1,98 @@
+"""Dependency-triggered scheduler (Algorithm 1 Stage 2) invariants."""
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.hybridflow import Pipeline, StaticPolicy, RandomPolicy
+from repro.core.planner import SyntheticPlanner
+from repro.core.scheduler import run_query, Schedule, WorldModelExecutor
+from repro.core.dag import topological_order
+from repro.data.tasks import gen_benchmark, WorldModel
+
+
+def _setup(n=20, bench="gpqa"):
+    wm = WorldModel()
+    pipe = Pipeline(wm=wm)
+    qs = gen_benchmark(bench, n)
+    return wm, pipe, qs
+
+
+def test_dependencies_respected_in_schedule():
+    """Property: no subtask starts before all its parents finished."""
+    wm, pipe, qs = _setup(30)
+    pol = RandomPolicy(0.5)
+    for q in qs:
+        dag, status = pipe.plan(q)
+        sched = Schedule()
+        run_query(q, dag, pol, pipe.edge, pipe.cloud, schedule_out=sched)
+        start = {sid: s for (s, e, sid, r) in sched.events}
+        end = {sid: e for (s, e, sid, r) in sched.events}
+        for nd in dag.nodes:
+            for d in nd.deps:
+                assert end[d] <= start[nd.sid] + 1e-9, (q.qid, nd.sid, d)
+
+
+def test_edge_concurrency_respected():
+    wm, pipe, qs = _setup(20)
+    pol = StaticPolicy(0)   # everything on the 1-slot edge
+    for q in qs:
+        dag, _ = pipe.plan(q)
+        sched = Schedule()
+        run_query(q, dag, pol, pipe.edge, pipe.cloud, schedule_out=sched)
+        evs = sorted((s, e) for (s, e, sid, r) in sched.events)
+        for (s1, e1), (s2, e2) in zip(evs, evs[1:]):
+            assert s2 >= e1 - 1e-9   # serialized on one slot
+
+
+def test_parallel_no_slower_than_chain():
+    wm, pipe, qs = _setup(40)
+    pol = StaticPolicy(1)
+    for q in qs:
+        dag, _ = pipe.plan(q)
+        par = run_query(q, dag, pol, pipe.edge, pipe.cloud)
+        cha = run_query(q, dag, pol, pipe.edge, pipe.cloud, chain=True)
+        assert par.latency <= cha.latency + 1e-9
+        # identical routing => identical cost and accuracy (common RNs)
+        assert abs(par.api_cost - cha.api_cost) < 1e-9
+        assert par.final_correct == cha.final_correct
+
+
+def test_makespan_at_least_critical_path():
+    wm, pipe, qs = _setup(20)
+    pol = StaticPolicy(1)
+    for q in qs:
+        dag, _ = pipe.plan(q)
+        res = run_query(q, dag, pol, pipe.edge, pipe.cloud)
+        # longest chain of latencies is a lower bound
+        order = topological_order(dag)
+        depth = {}
+        for sid in order:
+            nd = dag.node(sid)
+            lat = res.results[sid].latency
+            depth[sid] = lat + max((depth[d] for d in nd.deps), default=0.0)
+        assert res.latency >= max(depth.values()) - 1e-6
+
+
+def test_offload_accounting():
+    wm, pipe, qs = _setup(10)
+    res = pipe.random(qs, p=1.0)
+    assert res.offload_rate == 1.0
+    assert res.api_cost > 0
+    res0 = pipe.random(qs, p=0.0)
+    assert res0.offload_rate == 0.0
+    assert res0.api_cost == 0.0
+
+
+def test_world_model_common_random_numbers():
+    """Toggling one subtask leaves other subtasks' draws unchanged."""
+    wm = WorldModel()
+    q = gen_benchmark("gpqa", 1)[0]
+    base = {s.sid: 0 for s in q.subtasks}
+    r1 = dict(base)
+    r1[q.subtasks[0].sid] = 1
+    out0 = wm.execute(q, base)
+    out1 = wm.execute(q, r1)
+    # downstream changes only via parent-correctness, not via reseeding:
+    # if the toggled node is correct in both, everything matches
+    if out0[0] == out1[0]:
+        assert out0 == out1

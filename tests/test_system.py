@@ -1,0 +1,104 @@
+"""End-to-end behaviour tests for the paper's system (Table 1-3 claims,
+scaled down for CI speed)."""
+import numpy as np
+import pytest
+
+from repro.core.hybridflow import Pipeline
+from repro.core.profiler import train_default_router
+from repro.core.exposure import mean_exposure
+from repro.core.utility import UnifiedMetric
+from repro.data.tasks import gen_benchmark
+
+
+@pytest.fixture(scope="module")
+def router():
+    r, info = train_default_router(n_queries=150, epochs=60)
+    assert info["final_mse"] < 0.08
+    return r
+
+
+@pytest.fixture(scope="module")
+def pipe():
+    return Pipeline()
+
+
+@pytest.fixture(scope="module")
+def queries():
+    return gen_benchmark("gpqa", 120)
+
+
+def test_edge_cloud_ordering(pipe, queries):
+    e = pipe.cot(queries, "edge")
+    c = pipe.cot(queries, "cloud")
+    assert c.accuracy > e.accuracy + 0.15
+    assert c.api_cost > 0 and e.api_cost == 0
+    assert c.latency > e.latency          # slow API cloud (per paper)
+
+
+def test_decomposition_beats_direct(pipe, queries):
+    """Paper claim: structured decomposition beats direct prompting."""
+    for model in ("edge", "cloud"):
+        d = pipe.direct(queries, model)
+        c = pipe.cot(queries, model)
+        assert c.accuracy > d.accuracy - 0.02
+
+
+def test_hybridflow_beats_ablation_arms_on_utility(pipe, queries, router):
+    """Paper Table 3: HybridFlow attains the highest unified utility."""
+    e = pipe.cot(queries, "edge")
+
+    def u(m):
+        um = UnifiedMetric(m.accuracy, m.latency, m.api_cost)
+        c = um.normalized_cost(edge_latency=e.latency)
+        if c < 0.02:
+            return float("nan")
+        return um.utility(e.accuracy, e.latency)
+
+    hf = pipe.hybridflow(queries, router)
+    u_hf = u(hf)
+    u_cloud = u(pipe.cot(queries, "cloud"))
+    u_rand = u(pipe.random(queries))
+    u_chain = u(pipe.hybridflow(queries, router, chain=True))
+    assert u_hf > u_cloud, (u_hf, u_cloud)
+    assert u_hf > u_rand, (u_hf, u_rand)
+    assert u_hf > u_chain, (u_hf, u_chain)
+    fixed_us = [u(pipe.fixed(queries, router, t))
+                for t in (0.3, 0.4, 0.5, 0.6)]
+    assert u_hf > np.nanmax(fixed_us), (u_hf, fixed_us)
+
+
+def test_parallelism_reduces_latency(pipe, queries, router):
+    """Paper Table 3: HybridFlow-Chain is slower than HybridFlow."""
+    hf = pipe.hybridflow(queries, router)
+    ch = pipe.hybridflow(queries, router, chain=True)
+    assert hf.latency < ch.latency
+
+
+def test_adaptive_threshold_rises_within_query(pipe, queries, router):
+    """Fig. 3: the adaptive threshold increases with subtask position."""
+    hf = pipe.hybridflow(queries, router)
+    rising = 0
+    tot = 0
+    for r in hf.results:
+        if len(r.tau_trace) >= 3:
+            tot += 1
+            if r.tau_trace[-1] > r.tau_trace[0]:
+                rising += 1
+    assert rising / max(tot, 1) > 0.9
+
+
+def test_exposure_reduced_vs_cloud_only(pipe, queries, router):
+    """App. D.1: HybridFlow transmits fewer tokens than cloud-only."""
+    hf = pipe.hybridflow(queries, router)
+    cl = pipe.cot(queries, "cloud")
+    e_hf, n_hf = mean_exposure(hf.results)
+    e_cl, n_cl = mean_exposure(cl.results)
+    assert e_hf < e_cl
+    assert n_hf < n_cl == 1.0
+
+
+def test_bandit_calibration_no_collapse(pipe, queries, router):
+    """Enabling LinUCB keeps the system in a sane operating band."""
+    hf = pipe.hybridflow(queries[:60], router, calibrate=True)
+    assert 0.05 < hf.offload_rate < 0.95
+    assert hf.accuracy > 0.25

@@ -1,0 +1,76 @@
+"""Utility model + knapsack oracle (paper §3.1, App. B)."""
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.utility import (normalized_cost, utility, knapsack_oracle,
+                                greedy_ratio, lagrangian_policy, EPS)
+
+
+def test_normalized_cost_eq24():
+    # App. C Eq. 24: scales 10 s and $0.02
+    assert abs(normalized_cost(5.0, 0.01) - (0.25 + 0.25)) < 1e-9
+    assert normalized_cost(100.0, 1.0) == 1.0   # clipped
+    assert normalized_cost(0.0, 0.0) == 0.0
+
+
+def test_utility_clip():
+    assert utility(0.5, 0.1) == 1.0          # clipped at 1
+    assert utility(-0.2, 0.5) == 0.0         # clipped at 0
+    assert abs(utility(0.05, 0.5) - 0.05 / (0.5 + EPS)) < 1e-9
+
+
+def test_knapsack_simple():
+    dq = [0.5, 0.4, 0.3]
+    c = [0.5, 0.3, 0.3]
+    r, val = knapsack_oracle(dq, c, budget=0.6)
+    assert abs(val - 0.7) < 1e-9            # items 1+2
+    assert list(r) == [0, 1, 1]
+
+
+def test_knapsack_respects_budget():
+    rng = np.random.default_rng(0)
+    dq = rng.uniform(0, 0.3, 12)
+    c = rng.uniform(0.05, 0.5, 12)
+    r, _ = knapsack_oracle(dq, c, budget=0.8)
+    # floor discretization: overshoot bounded by n/grid
+    assert float(np.sum(c * r)) <= 0.8 + 12 / 1000 + 1e-9
+
+
+def test_lagrangian_threshold_structure():
+    dq = np.array([0.3, 0.1, 0.02])
+    c = np.array([0.2, 0.2, 0.2])
+    r = lagrangian_policy(dq, c, lam=0.6)
+    # offload iff dq/c > λ: ratios 1.5, 0.5, 0.1
+    assert list(r) == [1, 0, 0]
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.integers(1, 10), st.floats(0.1, 1.5), st.integers(0, 10_000))
+def test_knapsack_dominates_greedy(n, budget, seed):
+    """The DP oracle is an upper bound on the greedy ratio heuristic."""
+    rng = np.random.default_rng(seed)
+    dq = rng.uniform(0, 0.4, n)
+    c = rng.uniform(0.02, 0.6, n)
+    r_dp, v_dp = knapsack_oracle(dq, c, budget)
+    r_g = greedy_ratio(dq, c, budget)
+    v_g = float(np.sum(dq * r_g))
+    # floor discretization makes the DP an upper bound on any feasible
+    # allocation, greedy included
+    assert v_dp >= v_g - 1e-6
+    assert float(np.sum(c * r_dp)) <= budget + n / 1000 + 1e-9
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 8), st.integers(0, 10_000))
+def test_lagrangian_sweep_traces_knapsack_frontier(n, seed):
+    """As λ decreases, the threshold policy offloads monotonically more."""
+    rng = np.random.default_rng(seed)
+    dq = rng.uniform(0, 0.4, n)
+    c = rng.uniform(0.05, 0.6, n)
+    prev = None
+    for lam in (2.0, 1.0, 0.5, 0.1, 0.0):
+        r = set(np.nonzero(lagrangian_policy(dq, c, lam))[0].tolist())
+        if prev is not None:
+            assert prev <= r
+        prev = r
