@@ -24,7 +24,7 @@ def all_benchmarks():
                             table6_threshold_sweep, table7_planner,
                             table8_pair_swap, fig3_offload,
                             fig5_plan_quality, exposure_bench,
-                            kernels_bench, roofline)
+                            kernels_bench, roofline, serve_throughput)
     return {
         "table1": table1_accuracy,
         "table2": table2_efficiency,
@@ -38,6 +38,7 @@ def all_benchmarks():
         "exposure": exposure_bench,
         "kernels": kernels_bench,
         "roofline": roofline,
+        "serve": serve_throughput,
     }
 
 

@@ -1,11 +1,39 @@
-"""Serve a HybridFlow deployment with REAL JAX executor models.
+"""Serve a HybridFlow deployment with REAL JAX executor models, many
+queries in flight at once.
 
-Two serving engines (a small 'edge' model and a larger 'cloud' model, both
-reduced variants of assigned architectures) execute subtasks scheduled by
-the dependency-aware router; latency is measured wall-clock from actual
-model decode steps through the batched engine.
+Quickstart
+----------
+Two serving engines (a small 'edge' model and a larger 'cloud' model,
+both reduced variants of assigned architectures) execute subtasks
+scheduled by the dependency-aware router. The multi-query runtime admits
+every query up front: ready subtasks from different queries lease slots
+from the engines' shared KV pools, the fleet scheduler round-robins
+dispatch across queries, and latency is measured wall-clock from actual
+batched decode steps. (Subtask execution is still dispatched
+synchronously — the async pump that overlaps decode across queries in
+real time is a ROADMAP open item.)
 
+    # concurrent fleet serving (default: 8 queries in flight)
     PYTHONPATH=src python examples/serve_hybrid.py --queries 8
+
+    # compare against the seed's one-query-at-a-time loop
+    PYTHONPATH=src python examples/serve_hybrid.py --queries 8 --sequential
+
+    # cap fleet-wide API spend; exhaustion forces edge execution
+    PYTHONPATH=src python examples/serve_hybrid.py --global-k-max 0.01
+
+The printed report includes fleet throughput (queries per simulated
+second), p50/p99 per-query makespan, accuracy and API cost, plus the
+engines' KV-slot lease counters — ``slot_reuses`` > 0 shows requests
+recycling the bounded cache pool rather than growing it.
+
+Programmatic use mirrors the CLI::
+
+    from repro.serving.runtime import ServingRuntime
+    rt = ServingRuntime(edge, cloud, policy, planner=planner,
+                        max_inflight=8)
+    report = rt.serve(queries)       # or rt.serve_sequential(queries)
+    print(report.summary())
 """
 import argparse
 import os
@@ -19,20 +47,22 @@ import jax.numpy as jnp
 
 from repro.configs import get_config, PAPER_EDGE_ARCH, PAPER_CLOUD_ARCH
 from repro.core.hybridflow import HybridFlowPolicy
+from repro.core.planner import SyntheticPlanner
 from repro.core.profiler import train_default_router
-from repro.core.scheduler import run_query
 from repro.data.tasks import gen_benchmark, WorldModel
 from repro.models import model as M
 from repro.serving.engine import ServingEngine, JAXExecutor
+from repro.serving.runtime import ServingRuntime
 
 
-def build_engine(arch: str, scale: int, seed: int) -> ServingEngine:
+def build_engine(arch: str, scale: int, seed: int,
+                 batch_slots: int = 2) -> ServingEngine:
     cfg = get_config(arch).reduced()
     if scale > 1:  # "cloud": wider/deeper variant
         cfg = cfg.variant(d_model=cfg.d_model * 2 // 128 * 128 or 256,
                           n_layers=2)
     params = M.init_params(cfg, jax.random.PRNGKey(seed), dtype=jnp.float32)
-    return ServingEngine(cfg, params, batch_slots=2, max_len=192)
+    return ServingEngine(cfg, params, batch_slots=batch_slots, max_len=192)
 
 
 def main():
@@ -40,38 +70,38 @@ def main():
     ap.add_argument("--queries", type=int, default=6)
     ap.add_argument("--edge-arch", default=PAPER_EDGE_ARCH)
     ap.add_argument("--cloud-arch", default=PAPER_CLOUD_ARCH)
+    ap.add_argument("--max-inflight", type=int, default=8)
+    ap.add_argument("--global-k-max", type=float, default=None)
+    ap.add_argument("--sequential", action="store_true")
     args = ap.parse_args()
 
     print(f"edge executor: {args.edge_arch} (reduced); "
           f"cloud executor: {args.cloud_arch} (reduced x2)")
     wm = WorldModel()
-    edge_engine = build_engine(args.edge_arch, 1, 0)
-    cloud_engine = build_engine(args.cloud_arch, 2, 1)
+    edge_engine = build_engine(args.edge_arch, 1, 0, batch_slots=2)
+    cloud_engine = build_engine(args.cloud_arch, 2, 1, batch_slots=4)
     edge = JAXExecutor(edge_engine, wm, cloud=False, concurrency=1)
     cloud = JAXExecutor(cloud_engine, wm, cloud=True, concurrency=4,
                         price_out=3.2e-5)
 
     router, _ = train_default_router(n_queries=100, epochs=60)
     policy = HybridFlowPolicy(router, wm=wm)
+    runtime = ServingRuntime(edge, cloud, policy, planner=SyntheticPlanner(),
+                             max_inflight=args.max_inflight,
+                             global_k_max=args.global_k_max)
 
-    from repro.core.planner import SyntheticPlanner
-    planner = SyntheticPlanner()
     qs = gen_benchmark("gpqa", args.queries)
     t0 = time.time()
-    n_correct = 0
-    total_cost = 0.0
-    for q in qs:
-        dag, status = planner.plan(q)
-        res = run_query(q, dag, policy, edge, cloud, plan_status=status)
-        n_correct += res.final_correct
-        total_cost += res.api_cost
+    report = (runtime.serve_sequential(qs) if args.sequential
+              else runtime.serve(qs))
+    for q, res in zip(qs, report.results):
         routed = "".join("C" if res.offload[s] else "e"
                          for s in sorted(res.offload))
-        print(f"  {q.qid:10s} plan={status:8s} route={routed:8s} "
+        print(f"  {q.qid:10s} plan={res.plan_status:8s} route={routed:8s} "
               f"correct={res.final_correct} wall={res.latency:.2f}s")
-    wall = time.time() - t0
-    print(f"\n{args.queries} queries in {wall:.1f}s; accuracy "
-          f"{n_correct}/{args.queries}; API cost ${total_cost:.4f}")
+    mode = "sequential" if args.sequential else \
+        f"concurrent(max_inflight={args.max_inflight})"
+    print(f"\n[{mode}] {report.summary()} | real {time.time()-t0:.1f}s")
     print(f"edge engine: {edge_engine.stats}")
     print(f"cloud engine: {cloud_engine.stats}")
 

@@ -11,6 +11,8 @@ from repro.core.dag import (PlanDAG, Node, validate, repair, chain_fallback,
 from repro.core.planner import (SyntheticPlanner, parse_plan, plan_to_xml,
                                 decompose)
 from repro.core.router import Router, RouterConfig, train_router
+from repro.core.scheduler import (FleetScheduler, QueryResult, Schedule,
+                                  SubtaskResult, run_query)
 from repro.core.dual import DualController, TwoBudgetThreshold
 from repro.core.bandit import LinUCBCalibrator
 from repro.core.hybridflow import Pipeline, HybridFlowPolicy, MethodOutput

@@ -8,6 +8,15 @@ on-device GPU; the cloud API pool is wide), matching the paper's
 concurrent edge/cloud execution. ``chain=True`` forces sequential
 topological execution (HybridFlow-Chain ablation).
 
+The event loop lives in ``FleetScheduler``, which multiplexes the ready
+queues of *many* concurrent queries onto the same shared edge/cloud pools
+(the fleet is the scheduling unit, not the single query): round-robin
+dispatch for fairness, bounded admission, an optional *global*
+TwoBudgetThreshold that forces edge execution once the fleet-wide budget
+is exhausted, and optional cloud→edge spill under pool saturation.
+``run_query`` is the single-query view of the same loop and reproduces
+the paper's per-query Algorithm 1 exactly.
+
 The same scheduler drives either the analytic WorldModel executor (used
 for benchmark tables) or real JAX-model executors from repro.serving
 (used in examples/integration tests) through the Executor protocol.
@@ -22,6 +31,7 @@ from typing import Callable, Dict, List, Optional, Protocol, Tuple
 import numpy as np
 
 from repro.core.dag import PlanDAG, Node, topological_order
+from repro.core.dual import TwoBudgetThreshold
 from repro.data.tasks import Query, Subtask, WorldModel
 
 
@@ -139,11 +149,226 @@ class Schedule:
     # (start, end, sid, routed_cloud)
 
 
+@dataclass(eq=False)   # identity semantics: states are loop bookkeeping
+class _QueryState:
+    """Per-query bookkeeping inside the fleet event loop."""
+
+    query: Query
+    dag: PlanDAG
+    policy: RoutingPolicy
+    plan_status: str
+    schedule_out: Optional[Schedule]
+    order: List[int]
+    ctx: SchedulerContext = field(default_factory=SchedulerContext)
+    results: Dict[int, SubtaskResult] = field(default_factory=dict)
+    offload: Dict[int, int] = field(default_factory=dict)
+    indeg: Dict[int, int] = field(default_factory=dict)
+    children: Dict[int, List[int]] = field(default_factory=dict)
+    ready: List[Node] = field(default_factory=list)
+    waiting: List[Tuple[int, Node]] = field(default_factory=list)
+    n_done: int = 0
+    admitted: bool = False
+    admit_clock: float = 0.0
+    result: Optional[QueryResult] = None
+    index: int = -1
+
+
+class FleetScheduler:
+    """Shared event loop serving N queries over one edge/cloud pool pair.
+
+    The paper's Algorithm 1 schedules a single query's DAG; the fleet
+    scheduler is its multi-tenant generalization — every admitted query
+    keeps its own ready queue, routing context and (policy-held) budget
+    duals, while executor slots, the simulated clock and the optional
+    *global* budget are shared across the fleet:
+
+      * subtasks are routed the moment their parents complete (Algorithm 1
+        pops immediately), then wait for a free slot in their target pool;
+      * slot dispatch is round-robin over queries (fair: no query can
+        starve another by flooding one pool), FIFO within a query;
+      * ``max_inflight`` bounds concurrently-admitted queries; the rest
+        queue in submit order and are admitted as earlier queries finish;
+      * a global ``TwoBudgetThreshold`` (fleet-wide $ + wall-clock
+        latency budget — dl is charged as the fleet clock advances, the
+        same convention the per-query duals use) forces edge execution
+        once exhausted (``tau >= 1``) so cloud spend is capped without
+        deadlocking in-flight queries;
+      * ``spill_to_edge`` re-routes a cloud-bound subtask onto an idle
+        edge slot when the cloud pool is saturated (work conservation).
+
+    With one submitted query, no global budget and no spill, the loop is
+    step-for-step identical to the paper's per-query scheduler (the
+    ``run_query`` fast path delegates here).
+    """
+
+    def __init__(self, edge: Executor, cloud: Executor, *,
+                 max_inflight: Optional[int] = None,
+                 global_budget: Optional[TwoBudgetThreshold] = None,
+                 spill_to_edge: bool = False):
+        if getattr(edge, "concurrency", 1) < 1 or \
+                getattr(cloud, "concurrency", 1) < 1:
+            raise ValueError("executor pools need concurrency >= 1")
+        if max_inflight is not None and max_inflight < 1:
+            raise ValueError("max_inflight must be >= 1 (or None)")
+        self.edge = edge
+        self.cloud = cloud
+        self.max_inflight = max_inflight
+        self.global_budget = global_budget
+        self.spill_to_edge = spill_to_edge
+        self.makespan = 0.0
+        self.stats = {"forced_edge": 0, "spills": 0, "peak_inflight": 0,
+                      "dispatched": 0}
+        self._states: List[_QueryState] = []
+
+    # ---- admission ----------------------------------------------------
+    def submit(self, query: Query, dag: PlanDAG, policy: RoutingPolicy, *,
+               plan_status: str = "valid",
+               schedule_out: Optional[Schedule] = None) -> int:
+        """Enqueue one planned query; returns its fleet index."""
+        if dag.n == 0:
+            raise ValueError("scheduler requires a non-empty DAG")
+        order = topological_order(dag)
+        if order is None:
+            raise ValueError("scheduler requires a DAG (run repair first)")
+        qs = _QueryState(query, dag, policy, plan_status, schedule_out, order)
+        # dangling deps (sid not in the DAG) are ignored, matching
+        # topological_order/children — otherwise the node never becomes
+        # ready and the query stalls holding an admission slot forever
+        sids = set(dag.sids)
+        qs.indeg = {nd.sid: sum(1 for d in nd.deps if d in sids)
+                    for nd in dag.nodes}
+        qs.children = {nd.sid: dag.children(nd.sid) for nd in dag.nodes}
+        qs.index = len(self._states)
+        self._states.append(qs)
+        return qs.index
+
+    # ---- event loop ---------------------------------------------------
+    def run(self) -> List[QueryResult]:
+        """Drain all submitted queries; results come back in submit order."""
+        clock = 0.0
+        counter = itertools.count()
+        busy = {id(self.edge): 0, id(self.cloud): 0}
+        # heap rows: (end, tick, qi, sid, node, routed, start)
+        running: List[Tuple[float, int, int, int, Node, int, float]] = []
+        backlog = [qs for qs in self._states if qs.result is None]
+        active: List[_QueryState] = []    # admitted, unfinished
+
+        def admit_next():
+            while backlog and (self.max_inflight is None
+                               or len(active) < self.max_inflight):
+                qs = backlog.pop(0)
+                qs.admitted = True
+                qs.admit_clock = clock
+                qs.ready = [qs.dag.node(s) for s in qs.order
+                            if qs.indeg[s] == 0]
+                active.append(qs)
+                self.stats["peak_inflight"] = max(
+                    self.stats["peak_inflight"], len(active))
+                route_ready(qs)
+
+        def route_ready(qs: _QueryState):
+            # route every ready subtask immediately (Algorithm 1 pops as
+            # soon as dependencies resolve); the policy sees the query's
+            # own elapsed clock, not the fleet clock
+            for node in list(qs.ready):
+                qs.ready.remove(node)
+                qs.ctx.extra["clock"] = clock - qs.admit_clock
+                r, _info = qs.policy.decide(qs.query, node, qs.ctx)
+                if (r and self.global_budget is not None
+                        and self.global_budget.tau >= 1.0):
+                    r = 0
+                    self.stats["forced_edge"] += 1
+                qs.offload[node.sid] = r
+                qs.ctx.position += 1
+                qs.waiting.append((r, node))
+
+        def dispatch_one(qs: _QueryState) -> bool:
+            for j, (r, node) in enumerate(qs.waiting):
+                ex = self.cloud if r else self.edge
+                if busy[id(ex)] >= ex.concurrency:
+                    if not (self.spill_to_edge and r == 1
+                            and busy[id(self.edge)] < self.edge.concurrency):
+                        continue
+                    ex, r = self.edge, 0
+                    qs.offload[node.sid] = 0
+                    self.stats["spills"] += 1
+                qs.waiting.pop(j)
+                busy[id(ex)] += 1
+                res = ex.run(qs.query, node, qs.results)
+                heapq.heappush(running, (clock + res.latency, next(counter),
+                                         qs.index, node.sid, node, r, clock))
+                qs.results[node.sid] = res  # provisional (fields are final)
+                self.stats["dispatched"] += 1
+                return True
+            return False
+
+        def dispatch_all():
+            # round-robin over admitted-unfinished queries: one dispatch
+            # per query per pass until no pool slot can take any waiting
+            # subtask
+            progressed = True
+            while progressed:
+                progressed = False
+                for qs in active:
+                    if qs.waiting:
+                        progressed |= dispatch_one(qs)
+
+        admit_next()
+        dispatch_all()
+        while running:
+            end, _, qi, sid, node, r, start = heapq.heappop(running)
+            prev_clock, clock = clock, end
+            qs = self._states[qi]
+            ex = self.cloud if r else self.edge
+            busy[id(ex)] -= 1
+            res = qs.results[sid]
+            qs.ctx.k_used += res.api_cost
+            qs.ctx.l_used += res.latency
+            if self.global_budget is not None:
+                # dl is the fleet clock advance (wall-clock convention,
+                # like the per-query duals) — NOT the per-subtask latency
+                # sum, which would scale with concurrency
+                self.global_budget.spend(dk=res.api_cost,
+                                         dl=clock - prev_clock)
+            qs.policy.observe(qs.query, node, r, res, qs.ctx)
+            if qs.schedule_out is not None:
+                qs.schedule_out.events.append(
+                    (start - qs.admit_clock, end - qs.admit_clock, sid, r))
+            for c in qs.children[sid]:
+                qs.indeg[c] -= 1
+                if qs.indeg[c] == 0:
+                    qs.ready.append(qs.dag.node(c))
+            route_ready(qs)
+            qs.n_done += 1
+            if qs.n_done == qs.dag.n:
+                self._finalize(qs, clock)
+                active.remove(qs)
+                admit_next()
+            dispatch_all()
+
+        self.makespan = clock
+        stuck = [qs.query.qid for qs in self._states if qs.result is None]
+        if stuck:
+            raise RuntimeError(f"fleet drained with unfinished queries "
+                               f"(scheduler bug or malformed DAG): {stuck}")
+        return [qs.result for qs in self._states]
+
+    def _finalize(self, qs: _QueryState, clock: float) -> None:
+        gen = _generate_sid(qs.dag, qs.order)
+        qs.result = QueryResult(
+            qs.query.qid, qs.results[gen].correct, clock - qs.admit_clock,
+            sum(x.api_cost for x in qs.results.values()),
+            qs.results, qs.offload, list(qs.ctx.tau_trace), qs.dag,
+            qs.plan_status)
+
+
 def run_query(query: Query, dag: PlanDAG, policy: RoutingPolicy,
               edge: Executor, cloud: Executor, *, chain: bool = False,
               plan_status: str = "valid",
               schedule_out: Optional[Schedule] = None) -> QueryResult:
     """Execute one query's DAG. Returns QueryResult with simulated makespan."""
+    if dag.n == 0:
+        raise ValueError("scheduler requires a non-empty DAG")
     order = topological_order(dag)
     if order is None:
         raise ValueError("scheduler requires a DAG (run repair first)")
@@ -151,8 +376,6 @@ def run_query(query: Query, dag: PlanDAG, policy: RoutingPolicy,
     ctx = SchedulerContext()
     results: Dict[int, SubtaskResult] = {}
     offload: Dict[int, int] = {}
-    indeg = {nd.sid: len(nd.deps) for nd in dag.nodes}
-    children = {nd.sid: dag.children(nd.sid) for nd in dag.nodes}
 
     if chain:
         # sequential topological execution (HybridFlow-Chain): still routed,
@@ -180,57 +403,11 @@ def run_query(query: Query, dag: PlanDAG, policy: RoutingPolicy,
                            results, offload, list(ctx.tau_trace), dag,
                            plan_status)
 
-    # ---- event-driven concurrent execution ---------------------------
-    clock = 0.0
-    counter = itertools.count()
-    busy = {id(edge): 0, id(cloud): 0}
-    waiting: List[Tuple[int, Node]] = []       # ready but no free slot
-    running: List[Tuple[float, int, int, Node, int, float]] = []  # heap
-    ready = [dag.node(s) for s in order if indeg[s] == 0]
-
-    def try_dispatch():
-        nonlocal ready
-        # route every ready subtask immediately (Algorithm 1 pops as soon
-        # as dependencies resolve); dispatch respects worker concurrency
-        for node in list(ready):
-            ready.remove(node)
-            ctx.extra["clock"] = clock
-            r, info = policy.decide(query, node, ctx)
-            offload[node.sid] = r
-            ctx.position += 1
-            waiting.append((r, node))
-        for r, node in list(waiting):
-            ex = cloud if r else edge
-            if busy[id(ex)] < ex.concurrency:
-                waiting.remove((r, node))
-                busy[id(ex)] += 1
-                res = ex.run(query, node, results)
-                heapq.heappush(running, (clock + res.latency, next(counter),
-                                         node.sid, node, r, clock))
-                results[node.sid] = res  # provisional (fields are final)
-
-    try_dispatch()
-    while running:
-        end, _, sid, node, r, start = heapq.heappop(running)
-        clock = end
-        ex = cloud if r else edge
-        busy[id(ex)] -= 1
-        res = results[sid]
-        ctx.k_used += res.api_cost
-        ctx.l_used += res.latency
-        policy.observe(query, node, r, res, ctx)
-        if schedule_out is not None:
-            schedule_out.events.append((start, end, sid, r))
-        for c in children[sid]:
-            indeg[c] -= 1
-            if indeg[c] == 0:
-                ready.append(dag.node(c))
-        try_dispatch()
-
-    gen = _generate_sid(dag, order)
-    return QueryResult(query.qid, results[gen].correct, clock,
-                       sum(x.api_cost for x in results.values()),
-                       results, offload, list(ctx.tau_trace), dag, plan_status)
+    # ---- event-driven concurrent execution: single-tenant fleet ------
+    fleet = FleetScheduler(edge, cloud)
+    fleet.submit(query, dag, policy, plan_status=plan_status,
+                 schedule_out=schedule_out)
+    return fleet.run()[0]
 
 
 def _generate_sid(dag: PlanDAG, order: List[int]) -> int:

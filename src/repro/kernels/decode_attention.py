@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.dispatch import tpu_compiler_params
+
 NEG_INF = -1e30
 _QROWS = 8  # sublane padding for the single query row
 
@@ -98,7 +100,7 @@ def decode_attention_bhmd(q, k, v, kv_len, *, bk: int = 512,
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, H, _QROWS, hd), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(jnp.asarray(kv_len, jnp.int32), qp, k, v)

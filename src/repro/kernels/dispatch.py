@@ -30,6 +30,14 @@ def interpret_mode() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def tpu_compiler_params(**kwargs):
+    """Version-portable TPU compiler params: the class was renamed from
+    ``TPUCompilerParams`` to ``CompilerParams`` across JAX releases."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
 @contextmanager
 def pallas_enabled(v: bool = True):
     old = use_pallas()

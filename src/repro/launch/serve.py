@@ -1,5 +1,11 @@
 """Serving launcher: a HybridFlow edge/cloud deployment over two serving
-engines with the full decompose -> route -> execute pipeline.
+engines driven by the concurrent multi-query runtime.
+
+Queries are admitted together into ``ServingRuntime``: their ready
+subtasks share the edge engine's KV slots and the cloud pool via the
+fleet scheduler (continuous batching across queries), instead of the
+seed's one-query-at-a-time loop. ``--sequential`` restores the old
+behavior for comparison; ``--global-k-max`` caps fleet-wide API spend.
 
 On TPU the cloud engine would run the large model on the production mesh;
 on this container both engines run reduced configs on CPU (same code).
@@ -19,11 +25,11 @@ from repro.configs import (ARCH_IDS, get_config, PAPER_EDGE_ARCH,
 from repro.core.hybridflow import HybridFlowPolicy
 from repro.core.planner import SyntheticPlanner
 from repro.core.profiler import train_default_router
-from repro.core.scheduler import run_query
 from repro.core.exposure import mean_exposure
 from repro.data.tasks import gen_benchmark, WorldModel
 from repro.models import model as M
 from repro.serving.engine import ServingEngine, JAXExecutor
+from repro.serving.runtime import ServingRuntime
 
 
 def main():
@@ -34,6 +40,12 @@ def main():
     ap.add_argument("--benchmark", default="gpqa")
     ap.add_argument("--tau0", type=float, default=0.35)
     ap.add_argument("--k-max", type=float, default=0.04)
+    ap.add_argument("--max-inflight", type=int, default=8,
+                    help="concurrently admitted queries (fleet admission)")
+    ap.add_argument("--global-k-max", type=float, default=None,
+                    help="fleet-wide API $ cap; forces edge when exhausted")
+    ap.add_argument("--sequential", action="store_true",
+                    help="seed-style one-query-at-a-time baseline")
     ap.add_argument("--calibrate", action="store_true",
                     help="enable the LinUCB calibration head")
     args = ap.parse_args()
@@ -61,25 +73,30 @@ def main():
         calibrator = LinUCBCalibrator(dim=3)
     policy = HybridFlowPolicy(router, tau0=args.tau0, k_max=args.k_max,
                               calibrator=calibrator, wm=wm)
-    planner = SyntheticPlanner()
+    runtime = ServingRuntime(edge, cloud, policy, planner=SyntheticPlanner(),
+                             max_inflight=args.max_inflight,
+                             global_k_max=args.global_k_max)
 
     qs = gen_benchmark(args.benchmark, args.queries)
     t0 = time.time()
-    results = []
-    for q in qs:
-        dag, status = planner.plan(q)
-        res = run_query(q, dag, policy, edge, cloud, plan_status=status)
-        results.append(res)
+    if args.sequential:
+        report = runtime.serve_sequential(qs)
+    else:
+        report = runtime.serve(qs)
+    for q, res in zip(qs, report.results):
         route = "".join("C" if res.offload[s] else "e"
                         for s in sorted(res.offload))
-        print(f"  {q.qid:14s} {status:8s} route={route:8s} "
+        print(f"  {q.qid:14s} {res.plan_status:8s} route={route:8s} "
               f"correct={res.final_correct} wall={res.latency:5.2f}s "
               f"api=${res.api_cost:.4f}")
-    acc = sum(r.final_correct for r in results) / len(results)
-    cost = sum(r.api_cost for r in results)
-    _, nbar = mean_exposure(results)
-    print(f"\n{len(qs)} queries in {time.time()-t0:.1f}s | acc {acc:.2f} | "
-          f"API ${cost:.4f} | exposure Ē={nbar:.2f}")
+    _, nbar = mean_exposure(report.results)
+    mode = "sequential" if args.sequential else \
+        f"concurrent(max_inflight={args.max_inflight})"
+    print(f"\n[{mode}] {report.summary()} | exposure Ē={nbar:.2f} | "
+          f"real {time.time()-t0:.1f}s")
+    if report.stats.get("forced_edge"):
+        print(f"global budget forced {report.stats['forced_edge']} "
+              f"subtasks onto the edge")
     print(f"edge: {edge_engine.stats} | cloud: {cloud_engine.stats}")
 
 

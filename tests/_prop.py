@@ -1,0 +1,178 @@
+"""Seeded-random property harness with a hypothesis-compatible API subset.
+
+The tier-1 suite originally used ``hypothesis`` for its property tests, but
+the serving container does not ship it. This module exposes the small slice
+of the API the tests need — ``given``, ``settings`` and an ``st`` strategies
+namespace — backed by a deterministic seeded ``numpy`` generator. When real
+hypothesis *is* installed it is re-exported unchanged, so the tests keep the
+richer shrinking/edge-case machinery wherever available.
+
+Usage in tests (drop-in for the hypothesis imports):
+
+    from _prop import given, settings, st
+
+Knobs:
+  * ``PROP_MAX_EXAMPLES`` env var caps examples per property (default 20) —
+    keeps the CPU suite fast; raise locally for deeper soak runs.
+  * ``PROP_SEED`` env var perturbs the per-test base seed (default 0).
+
+The fallback's generation strategy: the first examples are boundary-biased
+(every strategy emits its min/max-ish corner first), then uniform draws.
+Failures re-raise with the generated arguments appended so a failing example
+can be reproduced as a plain unit test.
+"""
+from __future__ import annotations
+
+import os
+import zlib
+
+try:  # pragma: no cover - exercised only where hypothesis exists
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+    import math
+    import string
+
+    import numpy as np
+
+    _MAX_EXAMPLES_CAP = int(os.environ.get("PROP_MAX_EXAMPLES", "20"))
+    _BASE_SEED = int(os.environ.get("PROP_SEED", "0"))
+
+    class Strategy:
+        """A value generator: ``example(rng, i)`` draws the i-th example."""
+
+        def __init__(self, draw_fn, corners=()):
+            self._draw = draw_fn
+            self._corners = tuple(corners)
+
+        def example(self, rng, i=None):
+            if i is not None and i < len(self._corners):
+                c = self._corners[i]
+                return c(rng) if callable(c) else c
+            return self._draw(rng)
+
+    class _Namespace:
+        pass
+
+    st = _Namespace()
+
+    def _integers(min_value, max_value):
+        return Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)),
+            corners=(min_value, max_value))
+
+    def _floats(min_value, max_value, allow_nan=False, allow_infinity=False):
+        del allow_nan, allow_infinity  # bounded ranges only in this suite
+        return Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value)),
+            corners=(min_value, max_value))
+
+    def _booleans():
+        return Strategy(lambda rng: bool(rng.integers(0, 2)),
+                        corners=(False, True))
+
+    def _sampled_from(seq):
+        seq = list(seq)
+        return Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))],
+                        corners=(seq[0],))
+
+    def _lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements.example(rng) for _ in range(n)]
+        return Strategy(draw, corners=(
+            lambda rng: [elements.example(rng) for _ in range(min_size)],))
+
+    def _sets(elements, min_size=0, max_size=10):
+        def draw(rng):
+            target = int(rng.integers(min_size, max_size + 1))
+            out = set()
+            for _ in range(8 * max(target, 1)):
+                if len(out) >= target:
+                    break
+                out.add(elements.example(rng))
+            return out
+        return Strategy(draw, corners=((lambda rng: set()),)
+                        if min_size == 0 else ())
+
+    # alphabet with XML-ish structure so parser fuzz tests hit real branches
+    _TEXT_ALPHABET = (string.ascii_letters + string.digits +
+                      ' <>="/\\\n\t.:,;!?()[]{}-_' + "éλ∑")
+
+    def _text(min_size=0, max_size=20, alphabet=None):
+        chars = list(alphabet) if alphabet else list(_TEXT_ALPHABET)
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return "".join(chars[int(rng.integers(0, len(chars)))]
+                           for _ in range(n))
+        return Strategy(draw, corners=("" if min_size == 0 else None,)
+                        if min_size == 0 else ())
+
+    class _DrawFn:
+        def __init__(self, rng):
+            self._rng = rng
+
+        def __call__(self, strategy):
+            return strategy.example(self._rng)
+
+    def _composite(fn):
+        """``@st.composite`` — fn's first arg becomes a draw function."""
+        def make(*args, **kwargs):
+            return Strategy(lambda rng: fn(_DrawFn(rng), *args, **kwargs))
+        return make
+
+    st.integers = _integers
+    st.floats = _floats
+    st.booleans = _booleans
+    st.sampled_from = _sampled_from
+    st.lists = _lists
+    st.sets = _sets
+    st.text = _text
+    st.composite = _composite
+
+    def settings(max_examples=100, deadline=None, **_kwargs):
+        """Decorator recording example budget (deadline is ignored)."""
+        def deco(fn):
+            fn._prop_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies, **kw_strategies):
+        def deco(fn):
+            # note: no functools.wraps — copying __wrapped__ would make
+            # pytest read the original signature and demand fixtures for
+            # the strategy-supplied parameters
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_prop_max_examples", None)
+                if n is None:
+                    n = getattr(fn, "_prop_max_examples", 100)
+                n = max(1, min(int(n), _MAX_EXAMPLES_CAP))
+                seed = (zlib.crc32(fn.__qualname__.encode()) ^ _BASE_SEED)
+                rng = np.random.default_rng(seed)
+                for i in range(n):
+                    ex_args = [s.example(rng, i) for s in strategies]
+                    ex_kw = {k: s.example(rng, i)
+                             for k, s in kw_strategies.items()}
+                    try:
+                        fn(*args, *ex_args, **ex_kw, **kwargs)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"property failed on example {i}/{n} "
+                            f"(seed={seed}): args={ex_args!r} "
+                            f"kwargs={ex_kw!r}: {e}") from e
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper.__dict__.update(fn.__dict__)
+            return wrapper
+        return deco
+
+    # tiny self-check so a broken shim fails loudly at import time
+    assert math.isfinite(_floats(0.0, 1.0).example(
+        np.random.default_rng(0), 2))

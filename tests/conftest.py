@@ -5,5 +5,33 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
+import pytest
 
 jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def model_zoo():
+    """Session-scoped cache of reduced-config models: ``(cfg, params)`` per
+    (arch, seed, variant) key. JAX param init dominates the runtime of the
+    engine/serving tests; sharing one tiny model across test modules keeps
+    the full suite in minutes instead of re-initializing per test."""
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.models import model as M
+
+    cache = {}
+
+    def build(arch: str, *, seed: int = 0, **variant):
+        key = (arch, seed, tuple(sorted(variant.items())))
+        if key not in cache:
+            cfg = get_config(arch).reduced()
+            if variant:
+                cfg = cfg.variant(**variant)
+            params = M.init_params(cfg, jax.random.PRNGKey(seed),
+                                   dtype=jnp.float32)
+            cache[key] = (cfg, params)
+        return cache[key]
+
+    return build

@@ -1,6 +1,5 @@
 """DAG validation / repair / metrics (paper Def. C.2, App. C)."""
-import hypothesis.strategies as st
-from hypothesis import given, settings
+from _prop import given, settings, st
 
 from repro.core.dag import (Node, PlanDAG, validate, repair, chain_fallback,
                             topological_order, critical_path_length,

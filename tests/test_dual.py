@@ -1,7 +1,6 @@
 """Online dual thresholding (Eq. 10-11 / Eq. 27)."""
-import hypothesis.strategies as st
 import numpy as np
-from hypothesis import given, settings
+from _prop import given, settings, st
 
 from repro.core.dual import DualController, TwoBudgetThreshold
 

@@ -1,10 +1,9 @@
 """Chunked-GLA Pallas kernel vs the sequential oracle (SSM hot spot)."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _prop import given, settings, st
 
 from repro.kernels import ops
 from repro.models.linear_recurrence import gla_reference, chunked_gla

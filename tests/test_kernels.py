@@ -1,10 +1,9 @@
-"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis."""
-import hypothesis.strategies as st
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + properties."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _prop import given, settings, st
 
 from repro.kernels import ops, ref
 

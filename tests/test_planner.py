@@ -1,10 +1,9 @@
 """EAG planner: XML round-trip, tolerant parsing, Table 5 statistics."""
 from collections import Counter
 
-import hypothesis.strategies as st
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _prop import given, settings, st
 
 from repro.core.dag import validate, compression_ratio
 from repro.core.planner import (SyntheticPlanner, parse_plan, plan_to_xml,

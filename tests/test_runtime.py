@@ -1,0 +1,220 @@
+"""Multi-query serving runtime: concurrent==sequential result equivalence,
+global-budget exhaustion without deadlock, fair admission, KV-slot reuse."""
+import numpy as np
+import pytest
+
+from repro.core.dual import TwoBudgetThreshold
+from repro.core.hybridflow import (HybridFlowPolicy, Pipeline, RandomPolicy,
+                                   StaticPolicy)
+from repro.core.scheduler import FleetScheduler, WorldModelExecutor, run_query
+from repro.data.tasks import WorldModel, gen_benchmark
+
+
+def _planned(pipe, n=12, bench="gpqa"):
+    qs = gen_benchmark(bench, n)
+    return [(q, *pipe.plan(q)) for q in qs]
+
+
+def _assert_same_result(a, b):
+    assert a.qid == b.qid
+    assert a.final_correct == b.final_correct
+    assert a.offload == b.offload
+    assert abs(a.api_cost - b.api_cost) < 1e-12
+    assert set(a.results) == set(b.results)
+    for sid in a.results:
+        ra, rb = a.results[sid], b.results[sid]
+        assert (ra.correct, ra.routed_cloud, ra.tok_in, ra.tok_out) == \
+            (rb.correct, rb.routed_cloud, rb.tok_in, rb.tok_out)
+        assert abs(ra.latency - rb.latency) < 1e-12
+
+
+@pytest.mark.parametrize("policy_fn", [lambda: StaticPolicy(0),
+                                       lambda: StaticPolicy(1),
+                                       lambda: RandomPolicy(0.5)],
+                         ids=["edge", "cloud", "random"])
+def test_concurrent_matches_sequential_under_contention(policy_fn):
+    """Timing-independent policies: every per-query result is identical
+    whether N queries share the pools or run one at a time — slot
+    contention shifts start times, never outcomes."""
+    pipe = Pipeline()
+    planned = _planned(pipe, 12)
+    fleet = FleetScheduler(pipe.edge, pipe.cloud, max_inflight=8)
+    pol = policy_fn()
+    for q, dag, status in planned:
+        fleet.submit(q, dag, pol, plan_status=status)
+    conc = fleet.run()
+    seq = [run_query(q, dag, policy_fn(), pipe.edge, pipe.cloud,
+                     plan_status=status) for q, dag, status in planned]
+    for a, b in zip(conc, seq):
+        _assert_same_result(a, b)
+    # pool sharing can only help the fleet: concurrent makespan is bounded
+    # by running the same queries back-to-back
+    assert fleet.makespan <= sum(r.latency for r in seq) + 1e-9
+
+
+def test_concurrent_matches_sequential_hybridflow_wide_pools():
+    """The full adaptive policy (clock-coupled duals) is equivalent too
+    when pools are wide enough that queries never contend: each query's
+    own event timeline is then exactly the isolated one."""
+    from repro.core.profiler import train_default_router
+    router, _ = train_default_router(n_queries=60, epochs=20)
+    wm = WorldModel()
+    edge = WorldModelExecutor(wm, cloud=False, concurrency=256)
+    cloud = WorldModelExecutor(wm, cloud=True, concurrency=256)
+    pipe = Pipeline(wm=wm)
+    planned = _planned(pipe, 10)
+    fleet = FleetScheduler(edge, cloud)
+    pol_c = HybridFlowPolicy(router, wm=wm)
+    for q, dag, status in planned:
+        fleet.submit(q, dag, pol_c, plan_status=status)
+    conc = fleet.run()
+    pol_s = HybridFlowPolicy(router, wm=wm)   # fresh per-qid duals
+    seq = [run_query(q, dag, pol_s, edge, cloud, plan_status=status)
+           for q, dag, status in planned]
+    for a, b in zip(conc, seq):
+        _assert_same_result(a, b)
+        assert np.allclose(a.tau_trace, b.tau_trace)
+        assert abs(a.latency - b.latency) < 1e-12
+
+
+def test_global_budget_exhaustion_no_deadlock():
+    """Exhausting the fleet budget mid-flight forces edge routing but
+    every query still completes (no subtask waits forever on the cloud)."""
+    pipe = Pipeline()
+    planned = _planned(pipe, 10)
+    budget = TwoBudgetThreshold(tau0=0.0, k_max=0.002, l_max=float("inf"))
+    fleet = FleetScheduler(pipe.edge, pipe.cloud, max_inflight=4,
+                           global_budget=budget)
+    pol = StaticPolicy(1)                     # policy wants cloud always
+    for q, dag, status in planned:
+        fleet.submit(q, dag, pol, plan_status=status)
+    results = fleet.run()
+    assert len(results) == 10
+    assert all(r is not None and len(r.results) == r.dag.n for r in results)
+    assert fleet.stats["forced_edge"] > 0
+    assert budget.tau >= 1.0                  # budget really was exhausted
+    # once exhausted, later subtasks ran (free) on the edge
+    capped_cost = sum(r.api_cost for r in results)
+    uncapped = FleetScheduler(pipe.edge, pipe.cloud, max_inflight=4)
+    for q, dag, status in planned:
+        uncapped.submit(q, dag, pol, plan_status=status)
+    uncapped_cost = sum(r.api_cost for r in uncapped.run())
+    assert capped_cost < uncapped_cost
+
+
+def test_global_latency_budget_is_wall_clock():
+    """The fleet latency budget is charged by clock advance, not by the
+    per-subtask latency sum — N-way concurrency must not exhaust it N×
+    faster. With l_max above the fleet makespan nothing is forced."""
+    pipe = Pipeline()
+    planned = _planned(pipe, 8)
+    free = FleetScheduler(pipe.edge, pipe.cloud, max_inflight=8)
+    pol = StaticPolicy(1)
+    for q, dag, status in planned:
+        free.submit(q, dag, pol, plan_status=status)
+    baseline = free.run()
+    lat_sum = sum(r.results[s].latency for r in baseline for s in r.results)
+    assert lat_sum > free.makespan          # concurrency overlaps latencies
+
+    budget = TwoBudgetThreshold(tau0=0.0, k_max=float("inf"),
+                                l_max=free.makespan * 1.01 / 2)
+    fleet = FleetScheduler(pipe.edge, pipe.cloud, max_inflight=8,
+                           global_budget=budget)
+    for q, dag, status in planned:
+        fleet.submit(q, dag, pol, plan_status=status)
+    results = fleet.run()
+    assert fleet.stats["forced_edge"] == 0  # wall budget never exhausted
+    assert abs(budget.l_used - fleet.makespan) < 1e-9
+    assert len(results) == 8
+
+    # a tight wall-clock cap does force edge, and still drains cleanly
+    tight = TwoBudgetThreshold(tau0=0.0, k_max=float("inf"),
+                               l_max=free.makespan * 0.1 / 2)
+    fleet2 = FleetScheduler(pipe.edge, pipe.cloud, max_inflight=8,
+                            global_budget=tight)
+    for q, dag, status in planned:
+        fleet2.submit(q, dag, pol, plan_status=status)
+    assert len(fleet2.run()) == 8
+    assert fleet2.stats["forced_edge"] > 0
+
+
+def test_fair_admission_bounds_inflight():
+    pipe = Pipeline()
+    planned = _planned(pipe, 9)
+    fleet = FleetScheduler(pipe.edge, pipe.cloud, max_inflight=3)
+    pol = RandomPolicy(0.5)
+    for q, dag, status in planned:
+        fleet.submit(q, dag, pol, plan_status=status)
+    results = fleet.run()
+    assert len(results) == 9
+    assert fleet.stats["peak_inflight"] == 3
+    assert fleet.stats["dispatched"] == sum(r.dag.n for r in results)
+
+
+def test_runtime_report_throughput_beats_sequential():
+    """ServingRuntime end-to-end: >= 8 simultaneous queries through the
+    HybridFlow scheduler at higher qps than one-query-at-a-time."""
+    from repro.core.profiler import train_default_router
+    from repro.serving.runtime import ServingRuntime
+    router, _ = train_default_router(n_queries=60, epochs=20)
+    pipe = Pipeline()
+    qs = gen_benchmark("gpqa", 16)
+    rt_c = ServingRuntime(pipe.edge, pipe.cloud,
+                          HybridFlowPolicy(router, wm=pipe.wm),
+                          planner=pipe.planner, max_inflight=8)
+    conc = rt_c.serve(qs)
+    rt_s = ServingRuntime(pipe.edge, pipe.cloud,
+                          HybridFlowPolicy(router, wm=pipe.wm),
+                          planner=pipe.planner)
+    seq = rt_s.serve_sequential(qs)
+    assert conc.stats["peak_inflight"] == 8
+    assert conc.n == seq.n == 16
+    assert conc.qps > seq.qps
+    assert conc.makespan < seq.makespan
+    assert conc.p99_latency >= conc.p50_latency > 0
+
+
+def test_empty_batch_and_zero_budget():
+    """Runtime edge cases: an empty batch reports cleanly, and a zero
+    global cap means no cloud budget at all (exhausted before spend)."""
+    from repro.serving.runtime import ServingRuntime
+    pipe = Pipeline()
+    rt = ServingRuntime(pipe.edge, pipe.cloud, RandomPolicy(0.5),
+                        planner=pipe.planner)
+    for rep in (rt.serve([]), rt.serve_sequential([])):
+        assert rep.n == 0
+        assert rep.qps == 0.0 and rep.p99_latency == 0.0
+        assert "0 queries" in rep.summary()
+    rt0 = ServingRuntime(pipe.edge, pipe.cloud, StaticPolicy(1),
+                         planner=pipe.planner, global_k_max=0.0)
+    rep = rt0.serve(gen_benchmark("gpqa", 3))
+    assert rep.api_cost == 0.0
+    assert rep.stats["forced_edge"] == sum(len(r.results)
+                                           for r in rep.results)
+
+
+def test_kv_slots_reused_across_queries(model_zoo):
+    """JAX engines under the fleet: many queries' subtasks lease the same
+    bounded KV pool; slots are recycled, never grown."""
+    from repro.core.planner import SyntheticPlanner
+    from repro.serving.engine import JAXExecutor, ServingEngine
+    from repro.serving.runtime import ServingRuntime
+    cfg, params = model_zoo("qwen2-1.5b")
+    wm = WorldModel()
+    engine = ServingEngine(cfg, params, batch_slots=2, max_len=128)
+    edge = JAXExecutor(engine, wm, cloud=False, concurrency=1)
+    cloud_engine = ServingEngine(cfg, params, batch_slots=2, max_len=128)
+    cloud = JAXExecutor(cloud_engine, wm, cloud=True, concurrency=2,
+                        price_out=3.2e-5)
+    rt = ServingRuntime(edge, cloud, RandomPolicy(0.5),
+                        planner=SyntheticPlanner(), max_inflight=4)
+    report = rt.serve(gen_benchmark("gpqa", 4))
+    assert report.n == 4
+    n_subtasks = sum(len(r.results) for r in report.results)
+    total_reqs = engine.stats["requests"] + cloud_engine.stats["requests"]
+    assert total_reqs == n_subtasks
+    # pool stayed bounded while serving more requests than slots exist
+    for eng in (engine, cloud_engine):
+        assert eng.stats["peak_active"] <= eng.slots
+        if eng.stats["requests"] > eng.slots:
+            assert eng.stats["slot_reuses"] >= eng.stats["requests"] - eng.slots

@@ -1,13 +1,13 @@
 """Dependency-triggered scheduler (Algorithm 1 Stage 2) invariants."""
-import hypothesis.strategies as st
 import numpy as np
-from hypothesis import given, settings
+import pytest
 
 from repro.core.hybridflow import Pipeline, StaticPolicy, RandomPolicy
 from repro.core.planner import SyntheticPlanner
-from repro.core.scheduler import run_query, Schedule, WorldModelExecutor
-from repro.core.dag import topological_order
-from repro.data.tasks import gen_benchmark, WorldModel
+from repro.core.scheduler import (FleetScheduler, run_query, Schedule,
+                                  WorldModelExecutor)
+from repro.core.dag import Node, PlanDAG, topological_order
+from repro.data.tasks import gen_benchmark, Query, Subtask, WorldModel
 
 
 def _setup(n=20, bench="gpqa"):
@@ -81,6 +81,105 @@ def test_offload_accounting():
     res0 = pipe.random(qs, p=0.0)
     assert res0.offload_rate == 0.0
     assert res0.api_cost == 0.0
+
+
+# ---- edge cases the seed never exercised --------------------------------
+
+def _diamond_query(qid="diamond-0"):
+    """4-subtask diamond: 0 -> {1, 2} -> 3."""
+    sts = (Subtask(0, "explain the question", "EXPLAIN", (), 0.3, 60, 80),
+           Subtask(1, "analyze branch a", "ANALYZE", (0,), 0.5, 80, 120),
+           Subtask(2, "analyze branch b", "ANALYZE", (0,), 0.6, 80, 120),
+           Subtask(3, "generate the answer", "GENERATE", (1, 2), 0.4, 90, 140))
+    nodes = tuple(Node(s.sid, s.desc, s.role, s.deps, requires=s.requires,
+                       produces=s.produces) for s in sts)
+    return Query(qid, "gpqa", "diamond test query", sts), PlanDAG(nodes)
+
+
+def test_empty_dag_raises():
+    q, _ = _diamond_query()
+    pipe = Pipeline()
+    with pytest.raises(ValueError):
+        run_query(q, PlanDAG(()), StaticPolicy(0), pipe.edge, pipe.cloud)
+
+
+def test_single_node_dag():
+    q, _ = _diamond_query()
+    st = q.subtasks[3]
+    solo = Query("solo-0", "gpqa", "one step", (Subtask(
+        3, st.desc, st.role, (), st.difficulty, st.tok_in, st.tok_out),))
+    dag = PlanDAG((Node(3, st.desc, "GENERATE", (), produces=("r3",)),))
+    pipe = Pipeline()
+    for chain in (False, True):
+        res = run_query(solo, dag, StaticPolicy(1), pipe.edge, pipe.cloud,
+                        chain=chain)
+        assert set(res.results) == {3}
+        assert res.latency == res.results[3].latency
+        assert res.api_cost == res.results[3].api_cost
+
+
+def test_chain_vs_parallel_diamond_equivalence():
+    """On a diamond, chain and parallel agree on everything but makespan:
+    same routing => same correctness draws and cost (common RNs); the
+    parallel middle layer shaves exactly the shorter branch's latency."""
+    q, dag = _diamond_query()
+    pipe = Pipeline()
+    pol = StaticPolicy(1)
+    par = run_query(q, dag, pol, pipe.edge, pipe.cloud)
+    cha = run_query(q, dag, pol, pipe.edge, pipe.cloud, chain=True)
+    assert par.final_correct == cha.final_correct
+    assert abs(par.api_cost - cha.api_cost) < 1e-12
+    for sid in (0, 1, 2, 3):
+        assert par.results[sid].correct == cha.results[sid].correct
+    lats = {s: par.results[s].latency for s in (0, 1, 2, 3)}
+    assert abs(cha.latency - sum(lats.values())) < 1e-9
+    expect_par = lats[0] + max(lats[1], lats[2]) + lats[3]
+    assert abs(par.latency - expect_par) < 1e-9
+
+
+def test_dangling_dep_ignored_not_stalled():
+    """A dep sid missing from the DAG must not stall the query forever
+    (topological_order/children ignore it; so must the ready counters)."""
+    q, dag = _diamond_query()
+    nodes = list(dag.nodes)
+    nodes[2] = Node(2, nodes[2].desc, "ANALYZE", (0, 99),
+                    requires=("r0",), produces=("r2",))
+    bad = PlanDAG(tuple(nodes))
+    pipe = Pipeline()
+    res = run_query(q, bad, StaticPolicy(0), pipe.edge, pipe.cloud)
+    assert len(res.results) == 4          # every node executed
+
+
+def test_cloud_saturation_spills_to_edge():
+    """With spill enabled, a saturated cloud pool re-routes cloud-bound
+    subtasks onto idle edge slots instead of queueing them."""
+    wm = WorldModel()
+    edge = WorldModelExecutor(wm, cloud=False, concurrency=4)
+    cloud = WorldModelExecutor(wm, cloud=True, concurrency=1)
+    pipe = Pipeline(wm=wm)
+    qs = gen_benchmark("gpqa", 6)
+    fleet = FleetScheduler(edge, cloud, spill_to_edge=True)
+    for q in qs:
+        dag, status = pipe.plan(q)
+        fleet.submit(q, dag, StaticPolicy(1), plan_status=status)
+    results = fleet.run()
+    assert all(r is not None for r in results)
+    assert fleet.stats["spills"] > 0
+    spilled = sum(1 for r in results for v in r.offload.values() if v == 0)
+    assert spilled == fleet.stats["spills"]
+    # spilled subtasks really ran on the edge profile
+    for r in results:
+        for sid, v in r.offload.items():
+            assert r.results[sid].routed_cloud == v
+
+    # without spill the same workload keeps everything on the cloud
+    fleet2 = FleetScheduler(edge, cloud, spill_to_edge=False)
+    for q in qs:
+        dag, status = pipe.plan(q)
+        fleet2.submit(q, dag, StaticPolicy(1), plan_status=status)
+    res2 = fleet2.run()
+    assert fleet2.stats["spills"] == 0
+    assert all(v == 1 for r in res2 for v in r.offload.values())
 
 
 def test_world_model_common_random_numbers():

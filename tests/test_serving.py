@@ -57,9 +57,8 @@ def test_rolling_window_cache_equivalence():
     assert err < 1e-3, err
 
 
-def test_engine_batched_requests():
-    cfg = get_config("qwen2-1.5b").reduced()
-    params = M.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+def test_engine_batched_requests(model_zoo):
+    cfg, params = model_zoo("qwen2-1.5b")
     eng = ServingEngine(cfg, params, batch_slots=2, max_len=96)
     reqs = [eng.submit(f"request number {i}", max_new_tokens=6)
             for i in range(5)]
@@ -67,14 +66,32 @@ def test_engine_batched_requests():
     assert len(done) == 5
     assert all(r.done and len(r.output_ids) >= 1 for r in done)
     assert eng.stats["tokens_out"] >= 5
+    # 5 requests through 2 fixed KV slots: the pool is recycled, not grown
+    assert eng.stats["slot_reuses"] >= 3
+    assert eng.stats["peak_active"] <= 2
 
 
-def test_engine_greedy_deterministic():
-    cfg = get_config("qwen2-1.5b").reduced()
-    params = M.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+def test_engine_greedy_deterministic(model_zoo):
+    cfg, params = model_zoo("qwen2-1.5b")
     outs = []
     for _ in range(2):
         eng = ServingEngine(cfg, params, batch_slots=1, max_len=64)
         eng.submit("same prompt", max_new_tokens=5)
         outs.append(tuple(eng.run_until_done()[0].output_ids))
     assert outs[0] == outs[1]
+
+
+def test_engine_run_until_continuous_batching(model_zoo):
+    """run_until(req) finishes the target request while co-resident
+    requests keep decoding on the same steps (cross-query batching)."""
+    cfg, params = model_zoo("qwen2-1.5b")
+    eng = ServingEngine(cfg, params, batch_slots=2, max_len=96)
+    a = eng.submit("first query subtask", max_new_tokens=4)
+    b = eng.submit("second query subtask", max_new_tokens=12)
+    eng.run_until(a)
+    assert a.done
+    assert not b.done
+    assert len(b.output_ids) >= 2     # b advanced alongside a
+    assert eng.stats["peak_active"] == 2
+    eng.run_until(b)
+    assert b.done

@@ -1,7 +1,6 @@
 """Utility model + knapsack oracle (paper §3.1, App. B)."""
-import hypothesis.strategies as st
 import numpy as np
-from hypothesis import given, settings
+from _prop import given, settings, st
 
 from repro.core.utility import (normalized_cost, utility, knapsack_oracle,
                                 greedy_ratio, lagrangian_policy, EPS)
