@@ -1,19 +1,33 @@
 """Fleet serving throughput: concurrent multi-query runtime vs the seed's
-sequential one-query-at-a-time loop.
+sequential one-query-at-a-time loop — analytic executors AND real JAX
+engines.
 
-For each in-flight level the same query stream runs through the
-HybridFlow scheduler twice — once admitted all together (bounded by
-``max_inflight``), once back-to-back — and we report queries per
+Analytic section: for each in-flight level the same query stream runs
+through the HybridFlow scheduler twice — once admitted all together
+(bounded by ``max_inflight``), once back-to-back — reporting queries per
 simulated second, p50/p99 per-query makespan, accuracy and API cost.
-The concurrent runtime must beat the sequential baseline on qps at
-every in-flight level >= 2 (pool overlap across queries is the whole
-point of fleet scheduling).
 
-``PYTHONPATH=src python -m benchmarks.serve_throughput [--queries N]``
+Real-engine section: the same fleet drives a ``JAXExecutor`` pair
+(reduced-config models decoding for real) in two modes —
+
+* ``real-sync``  — the pre-pump synchronous dispatch (``pump=False``):
+  each subtask blocks in ``Executor.run`` and drains alone, so engine
+  ``peak_active`` stays 1;
+* ``real-pump``  — the async pump loop: co-scheduled subtasks decode in
+  the same micro-batches via batched chunked prefill + batched decode.
+
+The pump mode must beat the synchronous wall-clock by >= 1.3x (the
+overlap is the whole point). Results are also written as machine-readable
+``BENCH_serve.json`` rows ``{mode, qps, p50, p99, prefill_tokens,
+peak_active, ...}`` for the cross-PR perf trajectory.
+
+``PYTHONPATH=src python -m benchmarks.serve_throughput [--queries N]
+[--real-queries M] [--json PATH]``
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 
@@ -25,6 +39,7 @@ from repro.core.hybridflow import HybridFlowPolicy
 from repro.serving.runtime import ServingRuntime
 
 INFLIGHT_LEVELS = (2, 4, 8, 16)
+MIN_REAL_SPEEDUP = 1.3
 
 
 def _runtime(pipe, router, **kw):
@@ -58,17 +73,113 @@ def run(n_queries=None, bench="gpqa"):
     return header, rows
 
 
+class _HashRoutePolicy:
+    """Deterministic per-node routing (cloud unless sid % 3 == 0): the
+    same decisions regardless of completion order, so sync vs pump run
+    identical work and the wall-clock comparison is fair."""
+
+    def decide(self, query, node, ctx):
+        return int(node.sid % 3 != 0), {}
+
+    def observe(self, query, node, r, result, ctx):
+        pass
+
+
+def run_real(n_queries=6, bench="gpqa", *, arch="qwen2-1.5b",
+             max_inflight=8):
+    """Real-JAX-engine fleet: synchronous dispatch vs the async pump."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.core.planner import SyntheticPlanner
+    from repro.data.tasks import WorldModel, gen_benchmark
+    from repro.models import model as M
+    from repro.serving.engine import JAXExecutor, ServingEngine
+
+    cfg = get_config(arch).reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    wm = WorldModel()
+    qs = gen_benchmark(bench, n_queries)
+
+    def serve(pump: bool):
+        edge_e = ServingEngine(cfg, params, batch_slots=2, max_len=160,
+                               prefill_chunk=64)
+        cloud_e = ServingEngine(cfg, params, batch_slots=4, max_len=160,
+                                prefill_chunk=64)
+        edge = JAXExecutor(edge_e, wm, cloud=False, concurrency=1)
+        cloud = JAXExecutor(cloud_e, wm, cloud=True, concurrency=4,
+                            price_out=3.2e-5)
+        rt = ServingRuntime(edge, cloud, _HashRoutePolicy(),
+                            planner=SyntheticPlanner(),
+                            max_inflight=max_inflight, pump=pump)
+        rep = rt.serve(qs)
+        return rep, edge_e, cloud_e
+
+    # warm-up BOTH modes: each produces its own prefill-group shapes
+    # (pump: G>=2 per call; sync: G=1), so jit compiles must be paid
+    # outside either timed window for a fair wall-clock comparison
+    serve(True)
+    serve(False)
+    rows = []
+    for mode, pump in (("real-sync", False), ("real-pump", True)):
+        rep, edge_e, cloud_e = serve(pump)
+        rows.append({
+            "mode": mode,
+            "queries": n_queries,
+            "qps": rep.n / rep.wall_s if rep.wall_s > 0 else 0.0,
+            "p50": rep.p50_latency,
+            "p99": rep.p99_latency,
+            "wall_s": rep.wall_s,
+            "prefill_tokens": (edge_e.stats["prefill_tokens"]
+                               + cloud_e.stats["prefill_tokens"]),
+            "peak_active": max(edge_e.stats["peak_active"],
+                               cloud_e.stats["peak_active"]),
+            "prefill_batch_max": max(edge_e.stats["prefill_batch_max"],
+                                     cloud_e.stats["prefill_batch_max"]),
+        })
+    speedup = rows[0]["wall_s"] / max(rows[1]["wall_s"], 1e-9)
+    return rows, speedup
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--queries", type=int, default=None)
+    ap.add_argument("--queries", type=int, default=None,
+                    help="analytic-section query count")
+    ap.add_argument("--real-queries", type=int, default=6,
+                    help="real-engine-section query count (0 disables)")
     ap.add_argument("--benchmark", default="gpqa")
+    ap.add_argument("--json", default="BENCH_serve.json",
+                    help="machine-readable output path ('' disables)")
     args = ap.parse_args()
+
     header, rows = run(args.queries, args.benchmark)
     C.print_csv("serve_throughput", header, rows)
     seq_qps = rows[0][4]
     best = max(rows[1:], key=lambda r: r[4])
     print(f"\nbest: {best[0]} at {best[4]:.3f} q/s "
           f"({best[4] / seq_qps:.2f}x sequential)")
+
+    json_rows = [dict(zip(["mode", "max_inflight", "queries", "makespan_s",
+                           "qps", "p50", "p99", "accuracy", "api_usd"], r),
+                      prefill_tokens=None, peak_active=None) for r in rows]
+
+    if args.real_queries > 0:
+        real_rows, speedup = run_real(args.real_queries, args.benchmark)
+        C.print_csv("serve_throughput_real",
+                    list(real_rows[0].keys()),
+                    [list(r.values()) for r in real_rows])
+        print(f"\nreal-engine pump speedup: {speedup:.2f}x wall-clock over "
+              f"synchronous dispatch (target >= {MIN_REAL_SPEEDUP}x)")
+        if speedup < MIN_REAL_SPEEDUP:
+            print(f"WARNING: pump speedup {speedup:.2f}x below "
+                  f"{MIN_REAL_SPEEDUP}x target")
+        json_rows += real_rows
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(json_rows, f, indent=2)
+        print(f"wrote {args.json} ({len(json_rows)} rows)")
 
 
 if __name__ == "__main__":

@@ -6,15 +6,21 @@ Quickstart
 Two serving engines (a small 'edge' model and a larger 'cloud' model,
 both reduced variants of assigned architectures) execute subtasks
 scheduled by the dependency-aware router. The multi-query runtime admits
-every query up front: ready subtasks from different queries lease slots
-from the engines' shared KV pools, the fleet scheduler round-robins
-dispatch across queries, and latency is measured wall-clock from actual
-batched decode steps. (Subtask execution is still dispatched
-synchronously — the async pump that overlaps decode across queries in
-real time is a ROADMAP open item.)
+every query up front; dispatch goes through the fleet scheduler's *async
+pump loop*: every routed subtask is ``submit``-ed into its engine's
+queue, the loop keeps stepping both engines while routing continues, and
+co-scheduled subtasks from different queries decode in the same
+micro-batches. Prefill is batched and chunked — all newly admitted slots
+prefill in one padded call that writes KV lines straight into the shared
+slot pool, and prompts longer than ``prefill_chunk`` advance one chunk
+per step so they never stall co-resident decodes. Sampling happens on
+device inside the jitted step (one host transfer of token ids per step).
 
-    # concurrent fleet serving (default: 8 queries in flight)
+    # pumped fleet serving (default: 8 queries in flight)
     PYTHONPATH=src python examples/serve_hybrid.py --queries 8
+
+    # pre-pump synchronous dispatch (engines never co-batch queries)
+    PYTHONPATH=src python examples/serve_hybrid.py --queries 8 --no-pump
 
     # compare against the seed's one-query-at-a-time loop
     PYTHONPATH=src python examples/serve_hybrid.py --queries 8 --sequential
@@ -22,16 +28,18 @@ real time is a ROADMAP open item.)
     # cap fleet-wide API spend; exhaustion forces edge execution
     PYTHONPATH=src python examples/serve_hybrid.py --global-k-max 0.01
 
-The printed report includes fleet throughput (queries per simulated
-second), p50/p99 per-query makespan, accuracy and API cost, plus the
-engines' KV-slot lease counters — ``slot_reuses`` > 0 shows requests
-recycling the bounded cache pool rather than growing it.
+The printed report includes fleet throughput, p50/p99 per-query
+makespan, accuracy and API cost, plus the engines' counters —
+``slot_reuses`` > 0 shows requests recycling the bounded cache pool,
+``peak_active`` >= 2 shows genuine cross-query co-residency, and
+``prefill_batch_max`` >= 2 shows the prefill planner batching admitted
+requests into single calls.
 
 Programmatic use mirrors the CLI::
 
     from repro.serving.runtime import ServingRuntime
     rt = ServingRuntime(edge, cloud, policy, planner=planner,
-                        max_inflight=8)
+                        max_inflight=8)      # pump=None: auto-detect
     report = rt.serve(queries)       # or rt.serve_sequential(queries)
     print(report.summary())
 """
@@ -56,13 +64,15 @@ from repro.serving.runtime import ServingRuntime
 
 
 def build_engine(arch: str, scale: int, seed: int,
-                 batch_slots: int = 2) -> ServingEngine:
+                 batch_slots: int = 2,
+                 prefill_chunk: int = 64) -> ServingEngine:
     cfg = get_config(arch).reduced()
     if scale > 1:  # "cloud": wider/deeper variant
         cfg = cfg.variant(d_model=cfg.d_model * 2 // 128 * 128 or 256,
                           n_layers=2)
     params = M.init_params(cfg, jax.random.PRNGKey(seed), dtype=jnp.float32)
-    return ServingEngine(cfg, params, batch_slots=batch_slots, max_len=192)
+    return ServingEngine(cfg, params, batch_slots=batch_slots, max_len=192,
+                         prefill_chunk=prefill_chunk)
 
 
 def main():
@@ -73,6 +83,9 @@ def main():
     ap.add_argument("--max-inflight", type=int, default=8)
     ap.add_argument("--global-k-max", type=float, default=None)
     ap.add_argument("--sequential", action="store_true")
+    ap.add_argument("--no-pump", action="store_true",
+                    help="synchronous per-subtask dispatch (pre-pump "
+                         "baseline)")
     args = ap.parse_args()
 
     print(f"edge executor: {args.edge_arch} (reduced); "
@@ -88,7 +101,8 @@ def main():
     policy = HybridFlowPolicy(router, wm=wm)
     runtime = ServingRuntime(edge, cloud, policy, planner=SyntheticPlanner(),
                              max_inflight=args.max_inflight,
-                             global_k_max=args.global_k_max)
+                             global_k_max=args.global_k_max,
+                             pump=False if args.no_pump else None)
 
     qs = gen_benchmark("gpqa", args.queries)
     t0 = time.time()
@@ -100,7 +114,8 @@ def main():
         print(f"  {q.qid:10s} plan={res.plan_status:8s} route={routed:8s} "
               f"correct={res.final_correct} wall={res.latency:.2f}s")
     mode = "sequential" if args.sequential else \
-        f"concurrent(max_inflight={args.max_inflight})"
+        (f"{'sync' if args.no_pump else 'pumped'}"
+         f"(max_inflight={args.max_inflight})")
     print(f"\n[{mode}] {report.summary()} | real {time.time()-t0:.1f}s")
     print(f"edge engine: {edge_engine.stats}")
     print(f"cloud engine: {cloud_engine.stats}")

@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Protocol, Tuple
 
@@ -173,6 +174,20 @@ class _QueryState:
     index: int = -1
 
 
+class _LoopState:
+    """Mutable shared state of one event-loop run (either driver): the
+    fleet clock, per-pool busy counts, the admission backlog and the
+    admitted-unfinished set."""
+
+    __slots__ = ("clock", "busy", "backlog", "active")
+
+    def __init__(self, fleet: "FleetScheduler"):
+        self.clock = 0.0
+        self.busy = {id(fleet.edge): 0, id(fleet.cloud): 0}
+        self.backlog = [qs for qs in fleet._states if qs.result is None]
+        self.active: List[_QueryState] = []    # admitted, unfinished
+
+
 class FleetScheduler:
     """Shared event loop serving N queries over one edge/cloud pool pair.
 
@@ -194,7 +209,15 @@ class FleetScheduler:
         once exhausted (``tau >= 1``) so cloud spend is capped without
         deadlocking in-flight queries;
       * ``spill_to_edge`` re-routes a cloud-bound subtask onto an idle
-        edge slot when the cloud pool is saturated (work conservation).
+        edge slot when the cloud pool is saturated (work conservation);
+      * ``pump`` selects the event-loop driver: analytic executors run
+        the *simulated* clock (``ex.run`` returns a latency, the heap
+        advances time); async executors (``submit``/``poll``/``pump``,
+        e.g. ``JAXExecutor``) run the *real-time pump loop* — every
+        dispatch enqueues into its engine, the loop keeps stepping all
+        engines while routing continues, and co-scheduled subtasks from
+        different queries decode in the same micro-batches. ``pump=None``
+        (default) auto-detects from the executor pair.
 
     With one submitted query, no global budget and no spill, the loop is
     step-for-step identical to the paper's per-query scheduler (the
@@ -204,7 +227,8 @@ class FleetScheduler:
     def __init__(self, edge: Executor, cloud: Executor, *,
                  max_inflight: Optional[int] = None,
                  global_budget: Optional[TwoBudgetThreshold] = None,
-                 spill_to_edge: bool = False):
+                 spill_to_edge: bool = False,
+                 pump: Optional[bool] = None):
         if getattr(edge, "concurrency", 1) < 1 or \
                 getattr(cloud, "concurrency", 1) < 1:
             raise ValueError("executor pools need concurrency >= 1")
@@ -215,10 +239,16 @@ class FleetScheduler:
         self.max_inflight = max_inflight
         self.global_budget = global_budget
         self.spill_to_edge = spill_to_edge
+        self.pump = pump
         self.makespan = 0.0
         self.stats = {"forced_edge": 0, "spills": 0, "peak_inflight": 0,
                       "dispatched": 0}
         self._states: List[_QueryState] = []
+
+    def _async_capable(self) -> bool:
+        return all(hasattr(ex, "submit") and hasattr(ex, "poll")
+                   and hasattr(ex, "pump")
+                   for ex in (self.edge, self.cloud))
 
     # ---- admission ----------------------------------------------------
     def submit(self, query: Query, dag: PlanDAG, policy: RoutingPolicy, *,
@@ -245,25 +275,56 @@ class FleetScheduler:
     # ---- event loop ---------------------------------------------------
     def run(self) -> List[QueryResult]:
         """Drain all submitted queries; results come back in submit order."""
-        clock = 0.0
-        counter = itertools.count()
-        busy = {id(self.edge): 0, id(self.cloud): 0}
-        # heap rows: (end, tick, qi, sid, node, routed, start)
-        running: List[Tuple[float, int, int, int, Node, int, float]] = []
-        backlog = [qs for qs in self._states if qs.result is None]
-        active: List[_QueryState] = []    # admitted, unfinished
+        use_pump = self.pump if self.pump is not None else \
+            self._async_capable()
+        if use_pump:
+            if not self._async_capable():
+                raise ValueError("pump=True needs executors with "
+                                 "submit/poll/pump (e.g. JAXExecutor)")
+            return self._run_pumped()
+        return self._run_sim()
+
+    def _observe_completion(self, qs: _QueryState, node: Node, r: int,
+                            res: SubtaskResult, start: float, end: float,
+                            prev_clock: float) -> None:
+        """Shared completion bookkeeping for both event-loop drivers:
+        charge per-query and fleet budgets (dl is the fleet clock advance,
+        NOT the per-subtask latency sum, which would scale with
+        concurrency), notify the policy, log the schedule event and
+        unlock children into the ready queue."""
+        qs.ctx.k_used += res.api_cost
+        qs.ctx.l_used += res.latency
+        if self.global_budget is not None:
+            self.global_budget.spend(dk=res.api_cost, dl=end - prev_clock)
+        qs.policy.observe(qs.query, node, r, res, qs.ctx)
+        if qs.schedule_out is not None:
+            qs.schedule_out.events.append(
+                (start - qs.admit_clock, end - qs.admit_clock, node.sid, r))
+        for c in qs.children[node.sid]:
+            qs.indeg[c] -= 1
+            if qs.indeg[c] == 0:
+                qs.ready.append(qs.dag.node(c))
+        qs.n_done += 1
+
+    def _make_loop(self, st: "_LoopState", dispatch_action):
+        """Build the admission/routing/dispatch closures shared by both
+        event-loop drivers; only the dispatch *action* differs (sim:
+        ``ex.run`` + heap push; pump: ``ex.submit`` into the engine).
+        Keeping these in one place is what preserves the forced-edge
+        budget rule, spill policy and round-robin fairness as a single
+        behavior across drivers."""
 
         def admit_next():
-            while backlog and (self.max_inflight is None
-                               or len(active) < self.max_inflight):
-                qs = backlog.pop(0)
+            while st.backlog and (self.max_inflight is None
+                                  or len(st.active) < self.max_inflight):
+                qs = st.backlog.pop(0)
                 qs.admitted = True
-                qs.admit_clock = clock
+                qs.admit_clock = st.clock
                 qs.ready = [qs.dag.node(s) for s in qs.order
                             if qs.indeg[s] == 0]
-                active.append(qs)
+                st.active.append(qs)
                 self.stats["peak_inflight"] = max(
-                    self.stats["peak_inflight"], len(active))
+                    self.stats["peak_inflight"], len(st.active))
                 route_ready(qs)
 
         def route_ready(qs: _QueryState):
@@ -272,7 +333,7 @@ class FleetScheduler:
             # own elapsed clock, not the fleet clock
             for node in list(qs.ready):
                 qs.ready.remove(node)
-                qs.ctx.extra["clock"] = clock - qs.admit_clock
+                qs.ctx.extra["clock"] = st.clock - qs.admit_clock
                 r, _info = qs.policy.decide(qs.query, node, qs.ctx)
                 if (r and self.global_budget is not None
                         and self.global_budget.tau >= 1.0):
@@ -285,19 +346,17 @@ class FleetScheduler:
         def dispatch_one(qs: _QueryState) -> bool:
             for j, (r, node) in enumerate(qs.waiting):
                 ex = self.cloud if r else self.edge
-                if busy[id(ex)] >= ex.concurrency:
+                if st.busy[id(ex)] >= ex.concurrency:
                     if not (self.spill_to_edge and r == 1
-                            and busy[id(self.edge)] < self.edge.concurrency):
+                            and st.busy[id(self.edge)]
+                            < self.edge.concurrency):
                         continue
                     ex, r = self.edge, 0
                     qs.offload[node.sid] = 0
                     self.stats["spills"] += 1
                 qs.waiting.pop(j)
-                busy[id(ex)] += 1
-                res = ex.run(qs.query, node, qs.results)
-                heapq.heappush(running, (clock + res.latency, next(counter),
-                                         qs.index, node.sid, node, r, clock))
-                qs.results[node.sid] = res  # provisional (fields are final)
+                st.busy[id(ex)] += 1
+                dispatch_action(qs, node, r, ex)
                 self.stats["dispatched"] += 1
                 return True
             return False
@@ -309,49 +368,109 @@ class FleetScheduler:
             progressed = True
             while progressed:
                 progressed = False
-                for qs in active:
+                for qs in st.active:
                     if qs.waiting:
                         progressed |= dispatch_one(qs)
 
-        admit_next()
-        dispatch_all()
-        while running:
-            end, _, qi, sid, node, r, start = heapq.heappop(running)
-            prev_clock, clock = clock, end
-            qs = self._states[qi]
-            ex = self.cloud if r else self.edge
-            busy[id(ex)] -= 1
-            res = qs.results[sid]
-            qs.ctx.k_used += res.api_cost
-            qs.ctx.l_used += res.latency
-            if self.global_budget is not None:
-                # dl is the fleet clock advance (wall-clock convention,
-                # like the per-query duals) — NOT the per-subtask latency
-                # sum, which would scale with concurrency
-                self.global_budget.spend(dk=res.api_cost,
-                                         dl=clock - prev_clock)
-            qs.policy.observe(qs.query, node, r, res, qs.ctx)
-            if qs.schedule_out is not None:
-                qs.schedule_out.events.append(
-                    (start - qs.admit_clock, end - qs.admit_clock, sid, r))
-            for c in qs.children[sid]:
-                qs.indeg[c] -= 1
-                if qs.indeg[c] == 0:
-                    qs.ready.append(qs.dag.node(c))
-            route_ready(qs)
-            qs.n_done += 1
-            if qs.n_done == qs.dag.n:
-                self._finalize(qs, clock)
-                active.remove(qs)
-                admit_next()
-            dispatch_all()
+        return admit_next, route_ready, dispatch_all
 
-        self.makespan = clock
+    def _collect_results(self) -> List[QueryResult]:
         stuck = [qs.query.qid for qs in self._states if qs.result is None]
         if stuck:
             raise RuntimeError(f"fleet drained with unfinished queries "
                                f"(scheduler bug or malformed DAG): {stuck}")
         return [qs.result for qs in self._states]
+
+    def _run_sim(self) -> List[QueryResult]:
+        """Simulated-clock driver (analytic executors)."""
+        st = _LoopState(self)
+        counter = itertools.count()
+        # heap rows: (end, tick, qi, sid, node, routed, start)
+        running: List[Tuple[float, int, int, int, Node, int, float]] = []
+
+        def dispatch_action(qs, node, r, ex):
+            res = ex.run(qs.query, node, qs.results)
+            heapq.heappush(running, (st.clock + res.latency, next(counter),
+                                     qs.index, node.sid, node, r, st.clock))
+            qs.results[node.sid] = res  # provisional (fields are final)
+
+        admit_next, route_ready, dispatch_all = self._make_loop(
+            st, dispatch_action)
+        admit_next()
+        dispatch_all()
+        while running:
+            end, _, qi, sid, node, r, start = heapq.heappop(running)
+            prev_clock, st.clock = st.clock, end
+            qs = self._states[qi]
+            ex = self.cloud if r else self.edge
+            st.busy[id(ex)] -= 1
+            res = qs.results[sid]
+            self._observe_completion(qs, node, r, res, start, st.clock,
+                                     prev_clock)
+            route_ready(qs)
+            if qs.n_done == qs.dag.n:
+                self._finalize(qs, st.clock)
+                st.active.remove(qs)
+                admit_next()
+            dispatch_all()
+
+        self.makespan = st.clock
+        return self._collect_results()
+
+    def _run_pumped(self) -> List[QueryResult]:
+        """Real-time driver for async executors: dispatch = ``submit`` into
+        the executor's engine; a pump loop then steps every engine while
+        completions are polled, so subtasks co-scheduled on one engine
+        decode in the same micro-batches and the fleet clock is genuine
+        wall-clock (``makespan`` == elapsed seconds)."""
+        t0 = time.perf_counter()
+        st = _LoopState(self)
+        prev_clock = 0.0
+        pools = list({id(ex): ex for ex in (self.edge, self.cloud)}.values())
+        # in-flight rows: [future, qs, node, r, executor, start_clock]
+        inflight: List[List] = []
+
+        def dispatch_action(qs, node, r, ex):
+            fut = ex.submit(qs.query, node, qs.results)
+            inflight.append([fut, qs, node, r, ex, st.clock])
+
+        admit_next, route_ready, dispatch_all = self._make_loop(
+            st, dispatch_action)
+        admit_next()
+        dispatch_all()
+        while inflight:
+            stepped = False
+            for ex in pools:
+                stepped |= bool(ex.pump())
+            st.clock = time.perf_counter() - t0
+            done_rows = []
+            for row in inflight:
+                res = row[4].poll(row[0])
+                if res is not None:
+                    done_rows.append((row, res))
+            if not done_rows:
+                if not stepped:
+                    raise RuntimeError(
+                        "fleet pump stalled: subtasks in flight but every "
+                        "engine is idle (executor/engine mismatch?)")
+                continue
+            for row, res in done_rows:
+                _fut, qs, node, r, ex, start = row
+                inflight.remove(row)
+                st.busy[id(ex)] -= 1
+                qs.results[node.sid] = res
+                self._observe_completion(qs, node, r, res, start, st.clock,
+                                         prev_clock)
+                prev_clock = st.clock
+                route_ready(qs)
+                if qs.n_done == qs.dag.n:
+                    self._finalize(qs, st.clock)
+                    st.active.remove(qs)
+                    admit_next()
+            dispatch_all()
+
+        self.makespan = st.clock
+        return self._collect_results()
 
     def _finalize(self, qs: _QueryState, clock: float) -> None:
         gen = _generate_sid(qs.dag, qs.order)

@@ -3,9 +3,13 @@ engines driven by the concurrent multi-query runtime.
 
 Queries are admitted together into ``ServingRuntime``: their ready
 subtasks share the edge engine's KV slots and the cloud pool via the
-fleet scheduler (continuous batching across queries), instead of the
-seed's one-query-at-a-time loop. ``--sequential`` restores the old
-behavior for comparison; ``--global-k-max`` caps fleet-wide API spend.
+fleet scheduler's async pump loop — every dispatch ``submit``s into a
+real engine, the loop keeps stepping both engines while routing
+continues, and co-scheduled subtasks decode in the same micro-batches
+(batched chunked prefill + batched device-side sampling). ``--no-pump``
+forces the old synchronous per-subtask dispatch; ``--sequential``
+restores the seed's one-query-at-a-time loop; ``--global-k-max`` caps
+fleet-wide API spend.
 
 On TPU the cloud engine would run the large model on the production mesh;
 on this container both engines run reduced configs on CPU (same code).
@@ -46,6 +50,12 @@ def main():
                     help="fleet-wide API $ cap; forces edge when exhausted")
     ap.add_argument("--sequential", action="store_true",
                     help="seed-style one-query-at-a-time baseline")
+    ap.add_argument("--no-pump", action="store_true",
+                    help="synchronous per-subtask dispatch (pre-pump "
+                         "baseline; engines never co-batch queries)")
+    ap.add_argument("--prefill-chunk", type=int, default=64,
+                    help="prefill chunk length (long prompts never stall "
+                         "co-resident decodes)")
     ap.add_argument("--calibrate", action="store_true",
                     help="enable the LinUCB calibration head")
     args = ap.parse_args()
@@ -56,11 +66,11 @@ def main():
     edge_engine = ServingEngine(
         edge_cfg, M.init_params(edge_cfg, jax.random.PRNGKey(0),
                                 dtype=jnp.float32),
-        batch_slots=2, max_len=192)
+        batch_slots=2, max_len=192, prefill_chunk=args.prefill_chunk)
     cloud_engine = ServingEngine(
         cloud_cfg, M.init_params(cloud_cfg, jax.random.PRNGKey(1),
                                  dtype=jnp.float32),
-        batch_slots=4, max_len=192)
+        batch_slots=4, max_len=192, prefill_chunk=args.prefill_chunk)
     edge = JAXExecutor(edge_engine, wm, cloud=False, concurrency=1)
     cloud = JAXExecutor(cloud_engine, wm, cloud=True, concurrency=4,
                         price_out=3.2e-5)
@@ -75,7 +85,8 @@ def main():
                               calibrator=calibrator, wm=wm)
     runtime = ServingRuntime(edge, cloud, policy, planner=SyntheticPlanner(),
                              max_inflight=args.max_inflight,
-                             global_k_max=args.global_k_max)
+                             global_k_max=args.global_k_max,
+                             pump=False if args.no_pump else None)
 
     qs = gen_benchmark(args.benchmark, args.queries)
     t0 = time.time()
@@ -91,7 +102,8 @@ def main():
               f"api=${res.api_cost:.4f}")
     _, nbar = mean_exposure(report.results)
     mode = "sequential" if args.sequential else \
-        f"concurrent(max_inflight={args.max_inflight})"
+        (f"{'sync' if args.no_pump else 'pumped'}"
+         f"(max_inflight={args.max_inflight})")
     print(f"\n[{mode}] {report.summary()} | exposure Ē={nbar:.2f} | "
           f"real {time.time()-t0:.1f}s")
     if report.stats.get("forced_edge"):

@@ -72,6 +72,29 @@ def write_prefill(cache_k, cache_v, k, v, window: Optional[int]):
     return cache_k, cache_v
 
 
+def write_chunk(cache_k, cache_v, k, v, slot_idx, pos0, take):
+    """Batched ragged chunk write into a slot-pooled cache.
+
+    cache [B, M, KV, hd] (the engine's shared pool); k/v [G, S, KV, hd]
+    right-padded prompt chunks. One batched scatter per cache tensor: row
+    ``g`` writes its first ``take[g]`` lines at absolute positions
+    [pos0[g], pos0[g]+take[g]) of pool row ``slot_idx[g]`` — no
+    per-request cache allocation and no full-pool copy on the host; XLA
+    updates a donated pool in place. Padded positions are routed out of
+    bounds and dropped, so they can never corrupt lines a row already
+    owns and the compiled program is one scatter regardless of G.
+    """
+    M = cache_k.shape[1]
+    G, S = k.shape[:2]
+    assert S <= M, f"chunk width {S} exceeds cache lines {M}"
+    cols = pos0[:, None] + jnp.arange(S)[None, :]            # [G, S]
+    cols = jnp.where(jnp.arange(S)[None, :] < take[:, None], cols, M)
+    rows = slot_idx[:, None]                                 # [G, 1]
+    cache_k = cache_k.at[rows, cols].set(k, mode="drop")
+    cache_v = cache_v.at[rows, cols].set(v, mode="drop")
+    return cache_k, cache_v
+
+
 def write_decode(cache_k, cache_v, k, v, pos, window: Optional[int]):
     """Write one token at per-request absolute position ``pos`` [B]."""
     import jax.numpy as jnp

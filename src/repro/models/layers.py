@@ -106,7 +106,9 @@ def attention(q, k, v, *, causal: bool, window: Optional[int] = None,
     """Scaled dot-product attention with GQA, causal and sliding-window masks.
 
     q: [B, Sq, H, hd]; k/v: [B, Sk, KV, hd]. ``q_offset`` is the absolute
-    position of q[0] relative to k[0] (decode: Sk-1 typically).
+    position of q[0] relative to k[0] (decode: Sk-1 typically) — a scalar,
+    or a per-row [B] array (ragged chunked prefill: each batch row sits at
+    its own offset into its KV lines).
     ``kv_len`` optionally masks out cache positions >= kv_len (ragged decode).
     Returns [B, Sq, H, hd].
     """
@@ -118,18 +120,31 @@ def attention(q, k, v, *, causal: bool, window: Optional[int] = None,
     scale = 1.0 / math.sqrt(hd)
     scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
                         preferred_element_type=jnp.float32) * scale
-    qpos = jnp.arange(sq)[:, None] + q_offset          # [Sq,1]
-    kpos = jnp.arange(sk)[None, :]                     # [1,Sk]
-    mask = jnp.ones((sq, sk), dtype=bool)
-    if causal:
-        mask &= kpos <= qpos
-    if window is not None:
-        mask &= kpos > qpos - window
-    if kv_len is not None:
-        mask = mask[None] & (kpos[None] < kv_len[:, None, None])  # [B,Sq,Sk]
+    q_off = jnp.asarray(q_offset)
+    if q_off.ndim:                                     # per-row offsets [B]
+        qpos = jnp.arange(sq)[None, :, None] + q_off[:, None, None]  # [B,Sq,1]
+        kpos = jnp.arange(sk)[None, None, :]                         # [1,1,Sk]
+        mask = jnp.ones((b, sq, sk), dtype=bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        if kv_len is not None:
+            mask &= kpos < kv_len[:, None, None]
         mask = mask[:, None]                                      # [B,1,Sq,Sk]
     else:
-        mask = mask[None, None]
+        qpos = jnp.arange(sq)[:, None] + q_offset          # [Sq,1]
+        kpos = jnp.arange(sk)[None, :]                     # [1,Sk]
+        mask = jnp.ones((sq, sk), dtype=bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        if kv_len is not None:
+            mask = mask[None] & (kpos[None] < kv_len[:, None, None])  # [B,Sq,Sk]
+            mask = mask[:, None]                                      # [B,1,Sq,Sk]
+        else:
+            mask = mask[None, None]
     scores = jnp.where(mask, scores, -jnp.inf)
     probs = jax.nn.softmax(scores, axis=-1)
     # rows that are fully masked produce NaN; zero them (cannot happen for

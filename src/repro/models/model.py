@@ -96,6 +96,32 @@ def serve_prefill(params, cfg: ModelConfig, batch, cache):
     raise ValueError(cfg.family)
 
 
+# Families whose prompts can be prefilled as padded/ragged chunked batches
+# written straight into the slot-pooled cache. Attention-only decoders
+# qualify: causal masking keeps padded/garbage lines out of every valid
+# query. MoE is excluded (expert-capacity competition couples batch rows,
+# so batched outputs would not be token-identical to batch-1); recurrent
+# families (ssm/hybrid) and encoder-decoder/vlm prefixes carry state that
+# padding would corrupt — they use the engine's legacy per-slot path.
+CHUNKED_PREFILL_FAMILIES = ("dense",)
+
+
+def serve_prefill_chunk(params, cfg: ModelConfig, tokens, cache, slot_idx,
+                        pos0, take, kv_width=None):
+    """Batched ragged chunk prefill into the slot-pooled serving cache.
+
+    tokens [G, S] right-padded ids; slot_idx/pos0/take [G]; ``kv_width``
+    statically bounds how many cache lines attention reads — see
+    ``transformer.decoder_prefill_chunk``. Only families in
+    ``CHUNKED_PREFILL_FAMILIES`` support this path.
+    """
+    if cfg.family in CHUNKED_PREFILL_FAMILIES:
+        return T.decoder_prefill_chunk(params, cfg, tokens, cache, slot_idx,
+                                       pos0, take, kv_width=kv_width)
+    raise NotImplementedError(
+        f"chunked slot prefill is not supported for family {cfg.family!r}")
+
+
 def serve_decode(params, cfg: ModelConfig, token, pos, cache):
     if cfg.family in ("dense", "moe", "vlm"):
         return T.decoder_decode(params, cfg, token, pos, cache)

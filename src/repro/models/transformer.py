@@ -190,6 +190,76 @@ def decoder_prefill(p, cfg, batch, cache):
     return _logits(p, cfg, h[:, -1:]), {"k": ck, "v": cv}
 
 
+def decoder_layer_prefill_chunk(p_l, cfg, h, ck, cv, slot_idx, positions,
+                                pos0, take, *, window=None, kv_width=None):
+    """Chunked-prefill layer step writing this layer's slot-pooled cache.
+
+    h [G, S, D] chunk activations; ck/cv [B, M, KV, hd] — the FULL slot
+    pool, not a per-request cache. Row ``g`` occupies pool row
+    ``slot_idx[g]`` with its chunk starting at absolute offset
+    ``pos0[g]``; only its first ``take[g]`` tokens are real (the rest is
+    right-padding whose K/V lines are never attended: causal masking at
+    per-row offsets keeps every valid query inside its own written span,
+    and decode later masks by ``valid_len``). Attention runs against the
+    row's full cache lines so later chunks see all earlier ones.
+    """
+    hn = L.rms_norm(p_l["ln1"], h, cfg.norm_eps)
+    q, k, v = L.attn_qkv(p_l["attn"], cfg, hn, positions=positions)
+    ck, cv = KV.write_chunk(ck, cv,
+                            KV.expand_kv_for_cache(cfg, k).astype(ck.dtype),
+                            KV.expand_kv_for_cache(cfg, v).astype(cv.dtype),
+                            slot_idx, pos0, take)
+    # attend only the bucketed valid prefix (kv_width >= max(pos0+take)),
+    # not the full pool width — chunk c costs O(S * kv_width), and causal
+    # masking at per-row offsets keeps every valid query inside its own
+    # written span (the jnp path; a Pallas ragged-prefill kernel is a
+    # ROADMAP item)
+    w = kv_width if kv_width is not None else ck.shape[1]
+    ckg = jnp.take(ck[:, :w], slot_idx, axis=0)
+    cvg = jnp.take(cv[:, :w], slot_idx, axis=0)
+    out = L.attention(q, ckg.astype(q.dtype), cvg.astype(q.dtype),
+                      causal=True, window=window, q_offset=pos0)
+    g_, s_ = h.shape[:2]
+    h = h + L.dense(p_l["attn"]["wo"], out.reshape(g_, s_, cfg.q_dim))
+    hn = L.rms_norm(p_l["ln2"], h, cfg.norm_eps)
+    # dense layers only (CHUNKED_PREFILL_FAMILIES): moe is excluded
+    # because expert-capacity competition couples batch rows, which
+    # would break the token-identity guarantee of this path
+    y = L.mlp(p_l["mlp"], cfg, hn)
+    return h + y, ck, cv
+
+
+def decoder_prefill_chunk(p, cfg, tokens, cache, slot_idx, pos0, take,
+                          kv_width=None):
+    """Batched ragged chunked prefill for dense decoders.
+
+    tokens [G, S] right-padded chunk ids; slot_idx [G] cache-pool rows;
+    pos0 [G] absolute position of each row's tokens[:, 0]; take [G] valid
+    token count per row (1 <= take <= S). KV lines land directly in the
+    pooled ``cache`` (no per-request allocation/copy). ``kv_width`` — a
+    static bound >= max(pos0 + take) — limits attention to that many
+    cache lines instead of the whole pool. Returns (logits [G, 1, V] at
+    each row's last valid token, cache) — the logits are only meaningful
+    for rows whose prompt ends in this chunk.
+    """
+    h = L.embed(p["embed"], tokens)
+    window = cfg.decode_window()
+    S = tokens.shape[1]
+    positions = pos0[:, None] + jnp.arange(S)[None, :]
+
+    def body(h, xs):
+        p_l, ck, cv = xs
+        h, ck, cv = decoder_layer_prefill_chunk(
+            p_l, cfg, h, ck, cv, slot_idx, positions, pos0, take,
+            window=window, kv_width=kv_width)
+        return h, (ck, cv)
+
+    h, (ck, cv) = layer_scan(body, h, (p["layers"], cache["k"], cache["v"]))
+    h = L.rms_norm(p["final_norm"], h, cfg.norm_eps)
+    last = jnp.take_along_axis(h, (take - 1)[:, None, None], axis=1)
+    return _logits(p, cfg, last), {"k": ck, "v": cv}
+
+
 def decoder_decode(p, cfg, token, pos, cache):
     """token [B,1]; pos [B]. Returns (logits [B,1,V], cache)."""
     h = L.embed(p["embed"], token)

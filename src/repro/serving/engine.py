@@ -1,18 +1,44 @@
-"""Serving engine: batched prefill + decode over any repro model.
+"""Serving engine: batched chunked prefill + batched decode over any repro
+model.
 
 The engine serves fixed-size micro-batches with a KV cache pool:
 ``submit`` enqueues requests, ``step`` admits waiting requests into free
 slots (continuous batching), prefills them, and advances every active
-request by one decode token. Greedy or temperature sampling.
+request by one decode token.
 
-``JAXExecutor`` adapts an engine pair to HybridFlow's Executor protocol so
-the paper's scheduler can drive *real* JAX models (examples/serve_hybrid).
+Hot path (dense decoders — the HybridFlow edge/cloud executor archs):
+
+* **Batched chunked prefill** — a prefill planner drains all newly
+  admitted slots into ONE padded ``serve_prefill_chunk`` call per step;
+  prompts longer than ``prefill_chunk`` are processed one chunk per step
+  so long prompts never stall co-resident decodes. KV lines are written
+  directly into the shared slot-pooled cache via ``dynamic_update_slice``
+  — no per-request ``init_cache`` allocation, no whole-tree copy.
+* **Device-side batched sampling** — greedy/temperature sampling for all
+  live slots happens inside the jitted decode/prefill step (one PRNG key
+  array, one [slots] host transfer of sampled ids per step) instead of a
+  per-slot ``np.asarray(logits)`` round-trip.
+* **Device-resident positions** — ``pos`` lives on device as int32 and is
+  advanced inside the jitted step; inactive slots are parked at
+  ``max_len - 1`` (a line no live request ever attends).
+
+Non-batchable families (moe: expert-capacity couples batch rows; vlm /
+audio / hybrid / ssm: prefix or recurrent state) fall back to the legacy
+per-slot batch-1 prefill, which is kept as the reference path
+(``batched_prefill=False`` forces it for any family).
+
+``JAXExecutor`` adapts an engine pair to HybridFlow's Executor protocol
+so the paper's scheduler can drive *real* JAX models. It exposes both the
+synchronous ``run`` and the async ``submit``/``poll``/``pump`` surface
+the fleet scheduler's pump loop uses to overlap subtasks from different
+queries in the same micro-batches (examples/serve_hybrid).
 """
 from __future__ import annotations
 
+import functools
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +47,6 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.data import tokenizer as tok
 from repro.models import model as M
-from repro.models import kvcache as KV
 
 
 @dataclass
@@ -41,11 +66,69 @@ class Request:
         return tok.decode(self.output_ids)
 
 
+@dataclass
+class _PrefillJob:
+    """Per-slot progress of an in-flight (possibly chunked) prefill."""
+
+    ids: List[int]
+    off: int = 0
+
+    @property
+    def remaining(self) -> int:
+        return len(self.ids) - self.off
+
+
+def _device_sample(logits, key, temps):
+    """Greedy/temperature sampling for all slots on device. logits [B,V]."""
+    logits = logits.astype(jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    keys = jax.random.split(key, logits.shape[0])
+    scaled = logits / jnp.maximum(temps, 1e-6)[:, None]
+    sampled = jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
+    return jnp.where(temps > 0, sampled, greedy)
+
+
+@functools.lru_cache(maxsize=64)
+def _jit_steps(cfg: ModelConfig, max_len: int):
+    """Fused decode+sample and chunk-prefill+sample steps, jitted once per
+    (config, max_len) and shared by every engine instance — compile cache
+    survives engine churn (fleet drivers build engine pairs per run)."""
+
+    def decode_fn(params, tokens, pos, cache, key, temps, live):
+        # park inactive/prefilling slots at max_len-1: their garbage write
+        # lands on a line no live request ever attends (requests finish at
+        # pos >= max_len-1 before reading it)
+        pos_eff = jnp.where(live > 0, pos, max_len - 1)
+        logits, cache = M.serve_decode(params, cfg, tokens, pos_eff, cache)
+        key, sub = jax.random.split(key)
+        nxt = _device_sample(logits[:, 0], sub, temps)
+        return nxt, pos + live, cache, key
+
+    def prefill_fn(params, tokens, slot_idx, pos0, take, pos, cache, key,
+                   temps, kv_width):
+        logits, cache = M.serve_prefill_chunk(params, cfg, tokens, cache,
+                                              slot_idx, pos0, take,
+                                              kv_width=kv_width)
+        key, sub = jax.random.split(key)
+        first = _device_sample(logits[:, 0], sub, temps)
+        pos = pos.at[slot_idx].set(pos0 + take)
+        return first, pos, cache, key
+
+    # donate pos + cache: XLA aliases the buffers, so the per-step KV
+    # update is in place instead of a full-pool copy; kv_width is static
+    # (a power-of-two bucket) so attention shapes stay bounded
+    return (jax.jit(decode_fn, donate_argnums=(2, 3)),
+            jax.jit(prefill_fn, donate_argnums=(5, 6),
+                    static_argnums=(9,)))
+
+
 class ServingEngine:
     """Slot-based continuous batching engine for one model."""
 
     def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
-                 max_len: int = 512, dtype=jnp.float32, seed: int = 0):
+                 max_len: int = 512, dtype=jnp.float32, seed: int = 0,
+                 prefill_chunk: Optional[int] = None,
+                 batched_prefill: bool = True):
         self.cfg = cfg
         self.params = params
         self.slots = batch_slots
@@ -53,31 +136,49 @@ class ServingEngine:
         self.dtype = dtype
         self.key = jax.random.PRNGKey(seed)
         self.cache = M.init_cache(cfg, batch_slots, max_len, dtype=dtype)
-        self.pos = np.zeros(batch_slots, np.int64)        # next position
+        # device-resident next positions (int32), parked at max_len-1 for
+        # slots with no live request; host mirror for cheap finish checks
+        self.pos = jnp.full((batch_slots,), max_len - 1, jnp.int32)
+        self._pos_np = np.full(batch_slots, max_len - 1, np.int32)
+        self.prefill_chunk = (None if prefill_chunk is None
+                              else max(1, min(prefill_chunk, max_len)))
+        self.batched_prefill = (batched_prefill and
+                                cfg.family in M.CHUNKED_PREFILL_FAMILIES)
         self.active: List[Optional[Request]] = [None] * batch_slots
         self.queue: List[Request] = []
         self._rid = 0
         self._slot_used = [False] * batch_slots
-        self._decode = jax.jit(
-            lambda p, t, pos, c: M.serve_decode(p, cfg, t, pos, c))
+        self._prefilling: Dict[int, _PrefillJob] = {}
+        self._decode_step, self._prefill_step = _jit_steps(cfg, max_len)
         self.stats = {"tokens_out": 0, "prefill_tokens": 0, "steps": 0,
-                      "slot_reuses": 0, "peak_active": 0, "requests": 0}
+                      "slot_reuses": 0, "peak_active": 0, "requests": 0,
+                      "prefill_calls": 0, "prefill_batch_max": 0}
 
     # ---- public API ---------------------------------------------------
-    def submit(self, prompt: str | List[int], *, max_new_tokens: int = 32,
+    def submit(self, prompt: "str | List[int]", *, max_new_tokens: int = 32,
                temperature: float = 0.0) -> Request:
+        if max_new_tokens >= self.max_len - 1:
+            raise ValueError(
+                f"max_new_tokens={max_new_tokens} leaves no room for the "
+                f"prompt in a max_len={self.max_len} cache (need "
+                f"max_new_tokens <= max_len - 2)")
         ids = tok.encode(prompt) if isinstance(prompt, str) else list(prompt)
         ids = [min(i, self.cfg.vocab_size - 1) for i in ids]
         req = Request(self._rid, ids, max_new_tokens, temperature,
                       submitted_at=time.time())
+        req._engine = self            # ownership marker for run_until
         self._rid += 1
         self.queue.append(req)
         return req
 
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(a is not None for a in self.active)
+
     def run_until_done(self, max_steps: int = 10_000) -> List[Request]:
         done: List[Request] = []
         for _ in range(max_steps):
-            if not self.queue and all(a is None for a in self.active):
+            if not self.has_work:
                 break
             done.extend(self.step())
         return done
@@ -86,16 +187,22 @@ class ServingEngine:
         """Step the engine until ``req`` finishes (continuous batching:
         co-resident requests from other queries advance on the same decode
         steps — the fleet runtime's slot-sharing entry point)."""
+        if getattr(req, "_engine", None) is not self:
+            raise ValueError(
+                f"request {req.rid} was never submitted to this engine "
+                f"(submit() returns the Request object to wait on)")
         for _ in range(max_steps):
             if req.done:
                 return req
-            if not self.queue and all(a is None for a in self.active):
-                break  # req never entered the engine
+            if not self.has_work:
+                raise RuntimeError(
+                    f"engine drained with request {req.rid} unfinished "
+                    f"(engine bug: an owned request left the queue)")
             self.step()
-        if not req.done:
-            raise RuntimeError(f"request {req.rid} did not finish "
-                               f"within {max_steps} engine steps")
-        return req
+        if req.done:
+            return req
+        raise RuntimeError(f"request {req.rid} did not finish "
+                           f"within {max_steps} engine steps")
 
     @property
     def n_active(self) -> int:
@@ -114,17 +221,62 @@ class ServingEngine:
                     self.stats["slot_reuses"] += 1
                 self._slot_used[slot] = True
                 self.stats["requests"] += 1
-                self._prefill_slot(slot, req)
+                ids = req.prompt_ids[-(self.max_len - req.max_new_tokens - 1):]
+                if self.batched_prefill:
+                    self._prefilling[slot] = _PrefillJob(ids)
+                else:
+                    self._prefill_slot_legacy(slot, req, ids)
         self.stats["peak_active"] = max(self.stats["peak_active"],
                                         self.n_active)
 
-    def _prefill_slot(self, slot: int, req: Request) -> None:
-        """Single-request prefill into this slot of the shared cache.
+    def _bucket(self, n: int) -> int:
+        """Pad chunk width to a power-of-two bucket (bounded jit compiles)."""
+        b = 8
+        while b < n:
+            b *= 2
+        return min(b, self.max_len)
 
-        Uses a batch-1 prefill then writes the slot's cache lines — simple
-        and correct; a production engine would batch prefills too.
-        """
-        ids = req.prompt_ids[-(self.max_len - req.max_new_tokens - 1):]
+    def _prefill_tick(self) -> None:
+        """Advance every prefilling slot by one chunk — a single padded
+        ``serve_prefill_chunk`` call for the whole group."""
+        if not self._prefilling:
+            return
+        jobs = sorted(self._prefilling.items())
+        chunk = self.prefill_chunk or self.max_len
+        take = [min(j.remaining, chunk) for _, j in jobs]
+        width = self._bucket(max(take))
+        g = len(jobs)
+        tokens = np.zeros((g, width), np.int32)
+        pos0 = np.zeros(g, np.int32)
+        slot_idx = np.zeros(g, np.int32)
+        temps = np.zeros(g, np.float32)
+        for i, (slot, j) in enumerate(jobs):
+            tokens[i, :take[i]] = j.ids[j.off:j.off + take[i]]
+            pos0[i] = j.off
+            slot_idx[i] = slot
+            temps[i] = self.active[slot].temperature
+        kv_width = self._bucket(int(max(pos0[i] + take[i]
+                                        for i in range(g))))
+        first, self.pos, self.cache, self.key = self._prefill_step(
+            self.params, jnp.asarray(tokens), jnp.asarray(slot_idx),
+            jnp.asarray(pos0), jnp.asarray(np.asarray(take, np.int32)),
+            self.pos, self.cache, self.key, jnp.asarray(temps), kv_width)
+        first_np = np.asarray(first)
+        self.stats["prefill_calls"] += 1
+        self.stats["prefill_batch_max"] = max(
+            self.stats["prefill_batch_max"], g)
+        for i, (slot, j) in enumerate(jobs):
+            j.off += take[i]
+            self.stats["prefill_tokens"] += take[i]
+            if j.remaining == 0:
+                self.active[slot].output_ids.append(int(first_np[i]))
+                self._pos_np[slot] = len(j.ids)
+                del self._prefilling[slot]
+
+    def _prefill_slot_legacy(self, slot: int, req: Request,
+                             ids: List[int]) -> None:
+        """Single-request batch-1 prefill + slot copy — the reference path
+        for families without chunked-slot prefill support."""
         batch = {"tokens": jnp.asarray([ids], jnp.int32)}
         if self.cfg.family == "vlm":
             batch["patch_embeds"] = jnp.zeros(
@@ -151,45 +303,75 @@ class ServingEngine:
 
         self.cache = jax.tree.map(write, self.cache, cache1)
         n_img = self.cfg.n_image_patches if self.cfg.family == "vlm" else 0
-        self.pos[slot] = len(ids) + n_img
+        n = len(ids) + n_img
+        self.pos = self.pos.at[slot].set(n)
+        self._pos_np[slot] = n
         self.stats["prefill_tokens"] += len(ids)
-        req.output_ids.append(self._sample(logits[0, -1], req))
+        req.output_ids.append(self._sample_host(logits[0, -1], req))
 
-    def _sample(self, logits, req: Request) -> int:
+    def _sample_host(self, logits, req: Request) -> int:
+        """Host-side sampling (legacy prefill path only)."""
         logits = np.asarray(logits, np.float32)
         if req.temperature <= 0:
             return int(np.argmax(logits))
         self.key, k = jax.random.split(self.key)
-        return int(jax.random.categorical(k, jnp.asarray(logits) / req.temperature))
+        return int(jax.random.categorical(
+            k, jnp.asarray(logits) / req.temperature))
 
-    def step(self) -> List[Request]:
-        """One engine iteration: admit + one decode token for all active."""
-        self._admit()
-        live = [i for i, r in enumerate(self.active) if r is not None]
-        if not live:
+    def _decode_tick(self) -> List[Request]:
+        """One decode token for every live (fully prefilled) slot."""
+        live_slots = [i for i, r in enumerate(self.active)
+                      if r is not None and i not in self._prefilling]
+        if not live_slots:
             return []
         tokens = np.zeros((self.slots, 1), np.int32)
-        for i in live:
+        temps = np.zeros(self.slots, np.float32)
+        live = np.zeros(self.slots, np.int32)
+        for i in live_slots:
             tokens[i, 0] = self.active[i].output_ids[-1]
-        pos = jnp.asarray(self.pos, jnp.int32)
-        logits, self.cache = self._decode(self.params, jnp.asarray(tokens),
-                                          pos, self.cache)
+            temps[i] = self.active[i].temperature
+            live[i] = 1
+        nxt, self.pos, self.cache, self.key = self._decode_step(
+            self.params, jnp.asarray(tokens), self.pos, self.cache,
+            self.key, jnp.asarray(temps), jnp.asarray(live))
+        nxt_np = np.asarray(nxt)        # the ONE host transfer per step
         finished: List[Request] = []
-        for i in live:
+        for i in live_slots:
             req = self.active[i]
-            nxt = self._sample(logits[i, 0], req)
-            req.output_ids.append(nxt)
-            self.pos[i] += 1
+            req.output_ids.append(int(nxt_np[i]))
+            self._pos_np[i] += 1
             self.stats["tokens_out"] += 1
             if (len(req.output_ids) >= req.max_new_tokens
-                    or nxt == tok.EOS_ID
-                    or self.pos[i] >= self.max_len - 1):
+                    or nxt_np[i] == tok.EOS_ID
+                    or self._pos_np[i] >= self.max_len - 1):
                 req.done = True
                 req.finished_at = time.time()
                 finished.append(req)
                 self.active[i] = None
         self.stats["steps"] += 1
         return finished
+
+    def step(self) -> List[Request]:
+        """One engine iteration: admit waiting requests, advance every
+        prefilling slot by one chunk, then decode one token for all live
+        slots (prefill and decode of co-resident requests interleave, so
+        a long prompt never stalls running generations)."""
+        self._admit()
+        self._prefill_tick()
+        return self._decode_tick()
+
+
+@dataclass
+class _Inflight:
+    """Future for one subtask submitted to a JAXExecutor engine."""
+
+    req: Request
+    sid: int
+    cloud: bool
+    difficulty: float
+    n_bad_parents: int
+    query: object
+    t0: float
 
 
 class JAXExecutor:
@@ -201,13 +383,18 @@ class JAXExecutor:
     the integration point the paper's 'system shifts' calibration needs.
 
     One executor (and its engine) is shared by *all* queries in a fleet:
-    each ``run`` leases a KV slot from the engine's fixed pool and steps
-    only until its own request finishes (``run_until``), so requests that
-    overlap in the engine decode in the same micro-batches instead of a
-    call draining the whole engine. Note the fleet scheduler itself still
-    dispatches ``run`` synchronously, so today co-residency only arises
-    from engine-level callers; the async engine pump that overlaps fleet
-    dispatch in real time is a ROADMAP open item.
+    each subtask leases a KV slot from the engine's fixed pool. Two ways
+    to drive it:
+
+    * ``run`` — synchronous: submits and steps the engine until the
+      subtask's own request finishes (``run_until``); co-residency then
+      only arises from engine-level callers.
+    * ``submit``/``poll``/``pump`` — the async surface the fleet
+      scheduler's pump loop uses: ``submit`` enqueues and returns a
+      future, ``pump`` advances the engine one step, ``poll`` collects a
+      finished future. Subtasks from different queries submitted before
+      the next pump decode in the SAME micro-batches, so wall-clock
+      tracks the simulated makespan instead of serializing.
     """
 
     def __init__(self, engine: ServingEngine, wm, cloud: bool,
@@ -218,23 +405,43 @@ class JAXExecutor:
         self.concurrency = concurrency
         self.price_out = price_out
 
-    def run(self, query, node, dep_results):
-        from repro.core.scheduler import SubtaskResult, _subtask_of
+    # ---- async surface (fleet pump loop) -------------------------------
+    def submit(self, query, node, dep_results) -> _Inflight:
+        from repro.core.scheduler import _subtask_of
         st = _subtask_of(query, node)
         prompt = node.desc + " || " + " ; ".join(
             dep_results[d].answer for d in node.deps if d in dep_results)
-        t0 = time.time()
-        req = self.engine.submit(prompt, max_new_tokens=min(st.tok_out, 48))
-        self.engine.run_until(req)
-        latency = time.time() - t0
-        prof = self.wm.profile(int(self.cloud))
-        p = prof.p_correct(st.difficulty)
         n_bad = sum(1 for d in node.deps
                     if d in dep_results and not dep_results[d].correct)
-        p *= self.wm.parent_penalty ** n_bad
-        u = self.wm._u(query, st.sid)
-        n_out = len(req.output_ids)
+        req = self.engine.submit(prompt, max_new_tokens=min(st.tok_out, 48))
+        return _Inflight(req, st.sid, self.cloud, st.difficulty, n_bad,
+                         query, time.perf_counter())
+
+    def pump(self) -> bool:
+        """Advance the engine one step if it has work. Returns progress."""
+        if self.engine.has_work:
+            self.engine.step()
+            return True
+        return False
+
+    def poll(self, h: _Inflight):
+        """Collect a finished future; None while still decoding."""
+        if not h.req.done:
+            return None
+        from repro.core.scheduler import SubtaskResult
+        latency = time.perf_counter() - h.t0
+        prof = self.wm.profile(int(self.cloud))
+        p = prof.p_correct(h.difficulty)
+        p *= self.wm.parent_penalty ** h.n_bad_parents
+        u = self.wm._u(h.query, h.sid)
+        n_out = len(h.req.output_ids)
         cost = n_out * self.price_out if self.cloud else 0.0
-        return SubtaskResult(st.sid, int(self.cloud), bool(u < p), latency,
-                             cost, len(req.prompt_ids), n_out,
-                             answer=req.text[:120])
+        return SubtaskResult(h.sid, int(self.cloud), bool(u < p), latency,
+                             cost, len(h.req.prompt_ids), n_out,
+                             answer=h.req.text[:120])
+
+    # ---- synchronous surface (Executor protocol) -----------------------
+    def run(self, query, node, dep_results):
+        h = self.submit(query, node, dep_results)
+        self.engine.run_until(h.req)
+        return self.poll(h)

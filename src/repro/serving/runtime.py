@@ -27,8 +27,15 @@ Quickstart (analytic world-model executors)::
     print(report.qps, report.p50_latency, report.p99_latency)
 
 The same runtime drives real JAX engines by passing ``JAXExecutor`` pairs
-(see ``examples/serve_hybrid.py``); latency is then measured wall-clock
-from actual batched decode steps.
+(see ``examples/serve_hybrid.py``). Async executors are auto-detected and
+drained through the fleet scheduler's *pump loop*: every dispatch is a
+``submit`` into the executor's serving engine, the loop keeps stepping
+each engine while routing continues, and co-scheduled subtasks from
+different queries decode in the same micro-batches — wall-clock then
+tracks the simulated makespan instead of serializing subtask-by-subtask.
+``pump=False`` forces the pre-pump synchronous dispatch (the perf
+baseline in ``benchmarks/serve_throughput.py``); latency is measured
+wall-clock from actual batched decode steps either way.
 """
 from __future__ import annotations
 
@@ -120,7 +127,8 @@ class ServingRuntime:
                  max_inflight: Optional[int] = 8,
                  global_k_max: Optional[float] = None,
                  global_l_max: Optional[float] = None,
-                 spill_to_edge: bool = False):
+                 spill_to_edge: bool = False,
+                 pump: Optional[bool] = None):
         self.edge = edge
         self.cloud = cloud
         self.policy = policy
@@ -129,6 +137,7 @@ class ServingRuntime:
         self.global_k_max = global_k_max
         self.global_l_max = global_l_max
         self.spill_to_edge = spill_to_edge
+        self.pump = pump
         self.global_budget: Optional[TwoBudgetThreshold] = None
         self._pending: List[Tuple[Query, PlanDAG, str,
                                   Optional[Schedule]]] = []
@@ -156,7 +165,8 @@ class ServingRuntime:
         fleet = FleetScheduler(self.edge, self.cloud,
                                max_inflight=self.max_inflight,
                                global_budget=self.global_budget,
-                               spill_to_edge=self.spill_to_edge)
+                               spill_to_edge=self.spill_to_edge,
+                               pump=self.pump)
         for q, dag, status, sched in batch:
             fleet.submit(q, dag, self.policy, plan_status=status,
                          schedule_out=sched)
@@ -180,7 +190,8 @@ class ServingRuntime:
         t0 = time.perf_counter()
         for q, dag, status, sched in batch:
             fleet = FleetScheduler(self.edge, self.cloud,
-                                   global_budget=self.global_budget)
+                                   global_budget=self.global_budget,
+                                   pump=self.pump)
             fleet.submit(q, dag, self.policy, plan_status=status,
                          schedule_out=sched)
             results.extend(fleet.run())

@@ -81,6 +81,49 @@ def test_engine_greedy_deterministic(model_zoo):
     assert outs[0] == outs[1]
 
 
+def test_batched_chunked_prefill_token_identical(model_zoo):
+    """The batched (and chunked) prefill planner writes KV lines straight
+    into the slot pool; greedy outputs must be token-identical to the
+    legacy batch-1 per-slot prefill path for the same prompts."""
+    cfg, params = model_zoo("qwen2-1.5b")
+    prompts = ["short", "a much longer prompt with many more words in it",
+               "mid sized prompt here", "x", "another ragged length prompt"]
+
+    def run(**kw):
+        eng = ServingEngine(cfg, params, batch_slots=3, max_len=96, **kw)
+        reqs = [eng.submit(p, max_new_tokens=6) for p in prompts]
+        eng.run_until_done()
+        assert all(r.done for r in reqs)
+        return [tuple(r.output_ids) for r in reqs], eng
+
+    ref, eng_legacy = run(batched_prefill=False)
+    out_batched, eng_b = run()
+    out_chunked, eng_c = run(prefill_chunk=4)
+    assert out_batched == ref
+    assert out_chunked == ref
+    # the planner really batched: >= 2 queued requests in one prefill call
+    assert eng_b.stats["prefill_batch_max"] >= 2
+    assert eng_c.stats["prefill_batch_max"] >= 2
+    # chunking splits long prompts across several calls
+    assert eng_c.stats["prefill_calls"] > eng_b.stats["prefill_calls"]
+    # same total real prompt tokens on every path (padding is not counted)
+    assert (eng_b.stats["prefill_tokens"] == eng_c.stats["prefill_tokens"]
+            == eng_legacy.stats["prefill_tokens"])
+
+
+def test_engine_run_until_foreign_request_fails_fast(model_zoo):
+    """run_until on a request submitted to a different engine must raise
+    immediately instead of spinning max_steps."""
+    cfg, params = model_zoo("qwen2-1.5b")
+    a = ServingEngine(cfg, params, batch_slots=1, max_len=64)
+    b = ServingEngine(cfg, params, batch_slots=1, max_len=64)
+    r = a.submit("hello", max_new_tokens=4)
+    with pytest.raises(ValueError, match="never submitted"):
+        b.run_until(r)
+    a.run_until(r)          # the owning engine still finishes it
+    assert r.done
+
+
 def test_engine_run_until_continuous_batching(model_zoo):
     """run_until(req) finishes the target request while co-resident
     requests keep decoding on the same steps (cross-query batching)."""
