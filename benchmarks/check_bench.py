@@ -1,0 +1,106 @@
+"""Cross-PR serve-bench regression check.
+
+Diffs a freshly produced ``BENCH_serve.json`` against the committed
+``benchmarks/baseline_serve.json`` and exits non-zero when any comparable
+mode regresses beyond tolerance — qps for the scheduler/runtime rows,
+``prefill_tok_per_s`` for the prefill-microbench rows. CI runs it with
+``continue-on-error: true`` (shared runners are noisy and the real-engine
+rows are wall-clock), so a regression fails loudly in the log/annotations
+without gating the PR.
+
+Tolerances: analytic rows are simulated (deterministic up to scheduler
+tie-breaks) and use ``--tolerance`` (default 20%); ``real-*`` and
+``prefill-*`` rows are wall-clock on whatever machine ran them and use
+the looser ``--real-tolerance`` (default 60%).
+
+``PYTHONPATH=src python -m benchmarks.check_bench [--current PATH]
+[--baseline PATH] [--tolerance 0.2] [--real-tolerance 0.6]``
+
+Refresh the baseline by committing a new ``benchmarks/baseline_serve.json``
+produced by ``benchmarks.serve_throughput`` with the CI arguments
+(``--queries 8 --real-queries 3``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _load(path):
+    with open(path) as f:
+        rows = json.load(f)
+    return {r["mode"]: r for r in rows if isinstance(r, dict) and "mode" in r}
+
+
+def _metric(row):
+    """(name, value) of the row's throughput metric, or (None, None)."""
+    for name in ("qps", "prefill_tok_per_s"):
+        v = row.get(name)
+        if isinstance(v, (int, float)) and v > 0:
+            return name, float(v)
+    return None, None
+
+
+def check(current: str, baseline: str, tolerance: float,
+          real_tolerance: float) -> int:
+    if not os.path.exists(baseline):
+        print(f"no baseline at {baseline}; nothing to compare")
+        return 0
+    if not os.path.exists(current):
+        print(f"ERROR: current bench file {current} not found "
+              f"(did the smoke run fail?)")
+        return 1
+    cur = _load(current)
+    base = _load(baseline)
+
+    regressions = []
+    print(f"{'mode':<24} {'metric':<18} {'baseline':>12} {'current':>12} "
+          f"{'delta':>8}")
+    for mode, brow in sorted(base.items()):
+        name, bval = _metric(brow)
+        crow = cur.get(mode)
+        if name is None or crow is None:
+            continue
+        cval = crow.get(name)
+        if not isinstance(cval, (int, float)):
+            continue
+        delta = (cval - bval) / bval
+        tol = (real_tolerance if mode.startswith(("real-", "prefill-"))
+               else tolerance)
+        flag = " <-- REGRESSION" if delta < -tol else ""
+        print(f"{mode:<24} {name:<18} {bval:>12.3f} {cval:>12.3f} "
+              f"{delta:>7.1%}{flag}")
+        if flag:
+            regressions.append((mode, name, bval, cval, delta))
+
+    missing = sorted(set(base) - set(cur))
+    if missing:
+        print(f"note: modes in baseline but not in current run: {missing}")
+    if regressions:
+        print(f"\nFAIL: {len(regressions)} mode(s) regressed beyond "
+              f"tolerance (analytic {tolerance:.0%} / wall-clock "
+              f"{real_tolerance:.0%})")
+        return 1
+    print("\nOK: no serve-bench regression beyond tolerance")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", default="BENCH_serve.json")
+    ap.add_argument("--baseline", default=os.path.join(
+        os.path.dirname(__file__), "baseline_serve.json"))
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="allowed fractional drop for analytic rows")
+    ap.add_argument("--real-tolerance", type=float, default=0.6,
+                    help="allowed fractional drop for wall-clock rows "
+                         "(real-* engine modes, prefill-* microbench)")
+    args = ap.parse_args()
+    sys.exit(check(args.current, args.baseline, args.tolerance,
+                   args.real_tolerance))
+
+
+if __name__ == "__main__":
+    main()

@@ -4,19 +4,17 @@ from __future__ import annotations
 import functools
 import sys
 import os
-import time
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core.hybridflow import Pipeline, MethodOutput
+from repro.core.hybridflow import Pipeline
 from repro.core.profiler import train_default_router
 from repro.core.router import Router
 from repro.core.utility import UnifiedMetric
-from repro.data.tasks import (WorldModel, gen_benchmark, EDGE_PROFILE,
-                              CLOUD_PROFILE, SWAP_EDGE_PROFILE,
+from repro.data.tasks import (WorldModel, gen_benchmark, SWAP_EDGE_PROFILE,
                               SWAP_CLOUD_PROFILE)
 
 BENCHES = ("gpqa", "mmlu_pro", "aime24", "livebench_reasoning")

@@ -17,9 +17,13 @@ Real-engine section: the same fleet drives a ``JAXExecutor`` pair
   the same micro-batches via batched chunked prefill + batched decode.
 
 The pump mode must beat the synchronous wall-clock by >= 1.3x (the
-overlap is the whole point). Results are also written as machine-readable
-``BENCH_serve.json`` rows ``{mode, qps, p50, p99, prefill_tokens,
-peak_active, ...}`` for the cross-PR perf trajectory.
+overlap is the whole point). A third section microbenches the ragged
+chunked-prefill attention op itself — jnp reference twin vs the Pallas
+kernel (``prefill-ref`` / ``prefill-pallas`` rows). Results are also
+written as machine-readable ``BENCH_serve.json`` rows ``{mode, qps, p50,
+p99, prefill_tokens, peak_active, ...}`` for the cross-PR perf
+trajectory (diffed against ``benchmarks/baseline_serve.json`` by
+``benchmarks/check_bench.py`` in CI).
 
 ``PYTHONPATH=src python -m benchmarks.serve_throughput [--queries N]
 [--real-queries M] [--json PATH]``
@@ -142,6 +146,55 @@ def run_real(n_queries=6, bench="gpqa", *, arch="qwen2-1.5b",
     return rows, speedup
 
 
+def run_prefill_microbench(*, G=4, S=64, W=256, H=4, KV=2, hd=64, iters=3):
+    """Ref-vs-kernel ragged chunked-prefill attention microbench.
+
+    Times the exact op ``serve_prefill_chunk`` dispatches per layer — the
+    jnp reference twin vs the Pallas ragged kernel — on one engine-shaped
+    workload (G chunk rows, ragged take/pos0, kv_width=W). On CPU the
+    kernel runs in interpret mode, so treat these numbers as a
+    plumbing/trajectory check; they become a real speed comparison on
+    TPU (REPRO_PALLAS_INTERPRET=0).
+    """
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import ops
+    from repro.models import layers as L
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    q = jax.random.normal(ks[0], (G, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (G, W, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (G, W, KV, hd), jnp.float32)
+    take = jax.random.randint(ks[3], (G,), 1, S + 1).astype(jnp.int32)
+    pos0 = jax.random.randint(ks[4], (G,), 0, W + 1 - take).astype(jnp.int32)
+    n_tok = int(np.asarray(take).sum())
+
+    ref_fn = jax.jit(lambda q, k, v, p, t: L.ragged_prefill_attention(
+        q, k, v, pos0=p, take=t))
+
+    def timed(fn):
+        fn(q, k, v, pos0, take).block_until_ready()      # warm-up/compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(q, k, v, pos0, take)
+        out.block_until_ready()
+        return (time.perf_counter() - t0) / iters
+
+    rows = []
+    for mode, fn in (("prefill-ref", ref_fn),
+                     ("prefill-pallas", ops.ragged_prefill_attention)):
+        dt = timed(fn)
+        rows.append({"mode": mode, "G": G, "S": S, "kv_width": W,
+                     "heads": H, "kv_heads": KV, "head_dim": hd,
+                     "ms_per_call": dt * 1e3,
+                     "prefill_tok_per_s": n_tok / dt if dt > 0 else 0.0})
+    return rows
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--queries", type=int, default=None,
@@ -151,6 +204,9 @@ def main():
     ap.add_argument("--benchmark", default="gpqa")
     ap.add_argument("--json", default="BENCH_serve.json",
                     help="machine-readable output path ('' disables)")
+    ap.add_argument("--prefill-iters", type=int, default=3,
+                    help="ref-vs-kernel prefill microbench iterations "
+                         "(0 disables)")
     args = ap.parse_args()
 
     header, rows = run(args.queries, args.benchmark)
@@ -175,6 +231,13 @@ def main():
             print(f"WARNING: pump speedup {speedup:.2f}x below "
                   f"{MIN_REAL_SPEEDUP}x target")
         json_rows += real_rows
+
+    if args.prefill_iters > 0:
+        pf_rows = run_prefill_microbench(iters=args.prefill_iters)
+        C.print_csv("serve_prefill_microbench",
+                    list(pf_rows[0].keys()),
+                    [list(r.values()) for r in pf_rows])
+        json_rows += pf_rows
 
     if args.json:
         with open(args.json, "w") as f:

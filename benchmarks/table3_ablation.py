@@ -2,7 +2,6 @@
 accuracy, latency, API cost, normalized cost c, unified utility u."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks import common as C
 

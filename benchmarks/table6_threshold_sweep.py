@@ -2,7 +2,6 @@
 (sequential execution, as in the paper's sweep)."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks import common as C
 

@@ -8,7 +8,11 @@ from __future__ import annotations
 import importlib
 from typing import Dict, List
 
-from repro.configs.base import ModelConfig, InputShape, SHAPES  # noqa: F401
+__all__ = ["ModelConfig", "InputShape", "SHAPES", "ARCH_IDS", "get_config",
+           "all_configs", "PAPER_EDGE_ARCH", "PAPER_CLOUD_ARCH",
+           "SWAP_EDGE_ARCH", "SWAP_CLOUD_ARCH"]
+
+from repro.configs.base import ModelConfig, InputShape, SHAPES
 
 _MODULES = {
     "llava-next-mistral-7b": "repro.configs.llava_next_mistral_7b",

@@ -8,8 +8,8 @@ Every assigned architecture gets one file in this package defining
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field, replace
-from typing import Optional, Tuple
+from dataclasses import dataclass, replace
+from typing import Optional
 
 
 def _round_up(x: int, m: int) -> int:

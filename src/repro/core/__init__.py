@@ -5,6 +5,18 @@ budget-adaptive routing (utility, router, dual, bandit), dependency-
 triggered scheduling (scheduler), offline credit assignment (profiler),
 and the end-to-end pipeline with all paper baselines (hybridflow).
 """
+__all__ = [
+    "PlanDAG", "Node", "validate", "repair", "chain_fallback",
+    "topological_order", "critical_path_length", "compression_ratio",
+    "SyntheticPlanner", "parse_plan", "plan_to_xml", "decompose",
+    "Router", "RouterConfig", "train_router",
+    "FleetScheduler", "QueryResult", "Schedule", "SubtaskResult",
+    "run_query",
+    "DualController", "TwoBudgetThreshold", "LinUCBCalibrator",
+    "Pipeline", "HybridFlowPolicy", "MethodOutput",
+    "train_default_router", "profile_queries",
+]
+
 from repro.core.dag import (PlanDAG, Node, validate, repair, chain_fallback,
                             topological_order, critical_path_length,
                             compression_ratio)

@@ -9,7 +9,7 @@ utility, the UCB bonus drives exploration of offloading.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional, Sequence
+from typing import Sequence
 
 import numpy as np
 

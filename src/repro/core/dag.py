@@ -11,7 +11,7 @@ plan falls back to a sequential chain (paper: R_max=2, n_max=7).
 from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
-from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
+from typing import Dict, List, Optional, Set, Tuple
 
 N_MAX = 7
 R_MAX = 2

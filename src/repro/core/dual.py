@@ -11,7 +11,7 @@ Two equivalent parameterizations are provided:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 @dataclass

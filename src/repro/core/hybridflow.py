@@ -13,20 +13,18 @@ Methods (Tables 1-3):
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.dag import PlanDAG, Node, chain_fallback
-from repro.core.planner import SyntheticPlanner, decompose
-from repro.core.scheduler import (Executor, QueryResult, RoutingPolicy,
-                                  SchedulerContext, SubtaskResult,
+from repro.core.dag import PlanDAG, chain_fallback
+from repro.core.planner import SyntheticPlanner
+from repro.core.scheduler import (QueryResult, RoutingPolicy, SubtaskResult,
                                   WorldModelExecutor, run_query,
                                   run_parallel_ignore_deps, Schedule)
 from repro.core.dual import TwoBudgetThreshold
-from repro.core.bandit import LinUCBCalibrator, reward as bandit_reward
+from repro.core.bandit import LinUCBCalibrator
 from repro.core.router import Router
 from repro.data.tasks import Query, WorldModel, _rng
 

@@ -22,10 +22,9 @@ import xml.etree.ElementTree as ET
 from dataclasses import dataclass, replace
 from typing import Dict, List, Optional, Protocol, Tuple
 
-import numpy as np
 
-from repro.core.dag import Node, PlanDAG, repair, validate, N_MAX, R_MAX
-from repro.data.tasks import Query, Subtask, _rng
+from repro.core.dag import Node, PlanDAG, repair, N_MAX, R_MAX
+from repro.data.tasks import Query, _rng
 
 
 class Planner(Protocol):

@@ -27,7 +27,7 @@ import heapq
 import itertools
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Protocol, Tuple
+from typing import Dict, List, Optional, Protocol, Tuple
 
 import numpy as np
 
@@ -515,7 +515,6 @@ def run_query(query: Query, dag: PlanDAG, policy: RoutingPolicy,
             if schedule_out is not None:
                 schedule_out.events.append((t, t + res.latency, sid, r))
             t += res.latency
-        final = results[order[-1]]
         gen = _generate_sid(dag, order)
         return QueryResult(query.qid, results[gen].correct, t,
                            sum(x.api_cost for x in results.values()),

@@ -10,7 +10,7 @@ r*_i(λ) = 1[Δq_i/c_i > λ] (Eq. 6 / Eq. 18-19).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import numpy as np
 

@@ -20,9 +20,8 @@ on the GPQA stand-in approach the paper's Table 3 anchors (25.5 / 57.3).
 from __future__ import annotations
 
 import hashlib
-import math
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 

@@ -3,7 +3,6 @@ read the mesh here; drivers (dryrun/train/serve) set it around tracing."""
 from __future__ import annotations
 
 from contextlib import contextmanager
-from typing import Optional
 
 _MESH = None
 

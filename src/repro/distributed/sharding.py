@@ -13,13 +13,13 @@ dims and padding the spec with None on the left.
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Tuple
 
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ModelConfig, InputShape
+from repro.configs.base import ModelConfig
 from repro.launch.mesh import data_axes, model_axis_size
 
 

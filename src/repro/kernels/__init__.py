@@ -1,3 +1,27 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the serving/training hot paths.
+
+Four kernels, each with a pure-jnp oracle (``ref.py``) it is allclose-
+validated against in interpret mode on CPU:
+
+* ``flash_attention``          — online-softmax prefill/training attention
+  (causal, sliding window, GQA, scalar ``q_offset``), grid (B,H,Sq/BQ,Sk/BK).
+* ``ragged_prefill_attention`` — batched ragged chunked-prefill attention
+  for the slot-pooled serving cache: per-row ``pos0``/``take`` in scalar-
+  prefetch SMEM, KV bounded to the engine's ``kv_width`` bucket, fully
+  masked blocks skipped.
+* ``decode_attention``         — flash-decode: one query token per request
+  over a [B,M,KV,hd] cache with per-request ``kv_len``.
+* ``chunked_gla``              — chunked gated-linear-attention scan for the
+  Mamba2/mLSTM recurrence.
+
+(plus ``rmsnorm``, a small VPU warm-up kernel.)
+
+Dispatch contract: model code never imports kernels directly — it calls
+``layers._dispatch_attention`` / ``layers.ragged_prefill_attention``,
+which route to the jit'd wrappers in ``ops.py`` when
+``dispatch.use_pallas()`` is on (REPRO_USE_PALLAS=1 or
+``pallas_enabled(True)``) and to the jnp reference otherwise. The
+wrappers own layout transposes ([B,S,H,hd] model layout -> [B,H,S,hd]
+blocked layout), GQA head mapping, padding to block multiples, and
+interpret-mode selection (CPU interprets; real TPUs compile).
+"""

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.kernels import dispatch
 from repro.kernels.flash_attention import flash_attention_bhsd
 from repro.kernels.decode_attention import decode_attention_bhmd
+from repro.kernels.ragged_prefill_attention import ragged_prefill_attention_bhsd
 from repro.kernels.rmsnorm import rmsnorm_2d
 
 
@@ -30,6 +31,26 @@ def flash_attention(q, k, v, *, causal: bool = True,
     o = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
                              q_offset=q_offset, bq=bq, bk=bk,
                              interpret=dispatch.interpret_mode())
+    return jnp.swapaxes(o, 1, 2)
+
+
+@partial(jax.jit, static_argnames=("window", "bq", "bk"))
+def ragged_prefill_attention(q, k, v, pos0, take, *,
+                             window: Optional[int] = None,
+                             bq: int = 128, bk: int = 128):
+    """q [G,S,H,hd]; k/v [G,W,KV,hd]; pos0/take [G] -> [G,S,H,hd].
+
+    Batched ragged chunked-prefill attention: row ``g`` holds ``take[g]``
+    valid query tokens at absolute offset ``pos0[g]`` into its W pooled
+    KV lines (W is the engine's static ``kv_width`` bucket). Padding
+    query rows (>= take) come back as zeros.
+    """
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    o = ragged_prefill_attention_bhsd(qt, kt, vt, pos0, take, window=window,
+                                      bq=bq, bk=bk,
+                                      interpret=dispatch.interpret_mode())
     return jnp.swapaxes(o, 1, 2)
 
 

@@ -1,0 +1,160 @@
+"""Ragged chunked-prefill flash-attention Pallas TPU kernel.
+
+The serving engine's batched chunked prefill (``serve_prefill_chunk``)
+runs G co-resident prompt chunks through one padded call: row ``g`` holds
+``take[g]`` valid query tokens whose absolute positions start at
+``pos0[g]``, attending that row's slot-pooled KV lines bounded to a
+static ``kv_width`` bucket. This kernel is the TPU-native version of that
+attention: grid (G, H, Sq/BQ, W/BK), innermost KV dimension sequential
+("arbitrary") with online-softmax (m, l, acc) scratch in VMEM.
+
+Per-row raggedness rides in scalar-prefetch SMEM (``pos0``, ``take``
+int32 [G]); masking is computed against ``pos0[g] + row``:
+
+* query rows >= ``take[g]`` are padding — fully masked, emitted as zeros
+  (``take[g] == 0`` rows — pure padding — are all zeros);
+* causal: key position <= query position, which also fences off stale
+  pool lines past ``pos0[g] + take[g]`` (later chunks see every line an
+  earlier chunk wrote, and nothing a previous slot tenant left behind);
+* optional sliding ``window``: key position > query position - window.
+
+KV blocks that no valid query row of the current q-block can attend
+(beyond the causal extent, or entirely below the window) are skipped via
+``pl.when`` — a row early in its prompt pays O(pos0 + take), not
+O(kv_width). GQA maps q-head h to kv-head h // (H // KV) in the
+BlockSpec index maps, like the dense flash kernel.
+
+Validated against layers.ragged_prefill_attention (the jnp reference
+twin) in interpret mode on CPU (tests/test_ragged_prefill_kernel.py);
+on TPU drop interpret.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.dispatch import tpu_compiler_params
+
+NEG_INF = -1e30
+
+
+def _ragged_prefill_kernel(pos0_ref, take_ref, q_ref, k_ref, v_ref, o_ref,
+                           m_scr, l_scr, acc_scr, *, scale: float,
+                           window: Optional[int], bq: int, bk: int):
+    g = pl.program_id(0)
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    pos0 = pos0_ref[g]
+    take = take_ref[g]
+
+    # Block-level early exit: the largest valid query row in this q-block
+    # is min(take, (qi+1)*bq) - 1, so its causal extent ends at
+    # pos0 + that row; a KV block starting past it is fully masked. With a
+    # sliding window, blocks entirely below qpos_min - window are dead too.
+    row_hi = jnp.minimum(take, (qi + 1) * bq) - 1          # -1 when take==0
+    needed = (qi * bq < take) & (ki * bk <= pos0 + row_hi)
+    if window is not None:
+        needed &= ki * bk + bk > pos0 + qi * bq - window
+
+    @pl.when(needed)
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32)                # [bq, hd]
+        k = k_ref[0, 0].astype(jnp.float32)                # [bk, hd]
+        v = v_ref[0, 0].astype(jnp.float32)
+
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+
+        row = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        qpos = pos0 + row
+        mask = (row < take) & (kpos <= qpos)
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = l_scr[...]
+        safe = jnp.where(l > 0, l, 1.0)   # fully-masked rows -> zeros
+        o_ref[0, 0] = (acc_scr[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+def ragged_prefill_attention_bhsd(q, k, v, pos0, take, *,
+                                  window: Optional[int] = None,
+                                  bq: int = 128, bk: int = 128,
+                                  interpret: bool = True):
+    """q [G,H,Sq,hd]; k/v [G,KV,W,hd]; pos0/take [G] -> o [G,H,Sq,hd]."""
+    G, H, Sq, hd = q.shape
+    KV, W = k.shape[1], k.shape[2]
+    grp = H // KV
+    bq = min(bq, max(Sq, 8))
+    bk = min(bk, max(W, 8))
+    pq = (-Sq) % bq
+    pk = (-W) % bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    nq = (Sq + pq) // bq
+    nk = (W + pk) // bk
+
+    kernel = functools.partial(
+        _ragged_prefill_kernel, scale=1.0 / math.sqrt(hd), window=window,
+        bq=bq, bk=bk)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(G, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd),
+                         lambda g, h, i, j, pos0, take: (g, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda g, h, i, j, pos0, take, grp=grp:
+                         (g, h // grp, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda g, h, i, j, pos0, take, grp=grp:
+                         (g, h // grp, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda g, h, i, j, pos0, take: (g, h, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((G, H, Sq + pq, hd), q.dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(jnp.asarray(pos0, jnp.int32), jnp.asarray(take, jnp.int32), q, k, v)
+    return out[:, :, :Sq]

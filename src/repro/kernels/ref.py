@@ -1,11 +1,8 @@
 """Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
 from __future__ import annotations
 
-import math
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
 
 
 def attention_ref(q, k, v, *, causal: bool = True,
@@ -13,6 +10,14 @@ def attention_ref(q, k, v, *, causal: bool = True,
     """q [B,Sq,H,hd]; k/v [B,Sk,KV,hd] -> [B,Sq,H,hd] (f32 softmax)."""
     from repro.models.layers import attention
     return attention(q, k, v, causal=causal, window=window, q_offset=q_offset)
+
+
+def ragged_prefill_attention_ref(q, k, v, pos0, take, *,
+                                 window: Optional[int] = None):
+    """q [G,S,H,hd]; k/v [G,W,KV,hd]; pos0/take [G] -> [G,S,H,hd]."""
+    from repro.models.layers import ragged_prefill_attention
+    return ragged_prefill_attention(q, k, v, pos0=pos0, take=take,
+                                    window=window)
 
 
 def decode_attention_ref(q, k, v, kv_len):

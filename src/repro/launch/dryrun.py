@@ -29,7 +29,7 @@ from repro.configs.base import SHAPES, InputShape, ModelConfig
 from repro.launch import mesh as MESH
 from repro.distributed import sharding as SH
 from repro.models import model as M
-from repro.training.optimizer import AdamWConfig, AdamWState
+from repro.training.optimizer import AdamWState
 from repro.training.loop import TrainConfig, make_train_step
 
 

@@ -1,4 +1,9 @@
-from repro.models.model import (  # noqa: F401
+__all__ = [
+    "build_model", "init_params", "forward", "train_step_fn",
+    "serve_prefill_fn", "serve_decode_fn", "input_specs", "init_cache",
+]
+
+from repro.models.model import (
     build_model,
     init_params,
     forward,

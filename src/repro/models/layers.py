@@ -9,7 +9,6 @@ kernels are validated against.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Optional
 
 import jax
@@ -154,6 +153,26 @@ def attention(q, k, v, *, causal: bool, window: Optional[int] = None,
     return out
 
 
+def ragged_prefill_attention(q, k, v, *, pos0, take=None,
+                             window: Optional[int] = None):
+    """Reference twin of ``kernels.ops.ragged_prefill_attention``.
+
+    q [G,Sq,H,hd]; k/v [G,W,KV,hd]; pos0/take [G]. Row ``g`` carries
+    ``take[g]`` valid query tokens whose absolute positions start at
+    ``pos0[g]`` within its W cache lines; causal/window masks are applied
+    at those per-row offsets, and padding query rows (>= take) are
+    emitted as zeros exactly like the kernel (they never contaminate
+    valid lanes: chunked prefill only writes/reads the first ``take``
+    positions). ``take=None`` means every row is fully valid.
+    """
+    g, s = q.shape[:2]
+    out = attention(q, k, v, causal=True, window=window, q_offset=pos0)
+    if take is None:
+        return out
+    valid = jnp.arange(s)[None, :] < take[:, None]
+    return jnp.where(valid[:, :, None, None], out, jnp.zeros_like(out))
+
+
 def blocked_attention(q, k, v, *, causal: bool, window: Optional[int] = None,
                       q_offset=0, block_q: int = 512):
     """Flash-style attention at the XLA level: lax.map over q blocks with
@@ -260,8 +279,20 @@ def cross_attention_block(p, cfg, x, memory):
     return dense(p["wo"], out.reshape(b, s, cfg.q_dim))
 
 
-def _dispatch_attention(q, k, v, *, causal, window, q_offset=0, kv_len=None):
+def _dispatch_attention(q, k, v, *, causal, window, q_offset=0, kv_len=None,
+                        take=None):
     from repro.kernels import dispatch as kd
+    q_off = jnp.asarray(q_offset)
+    if q_off.ndim and causal and kv_len is None:
+        # per-row offsets [B]: ragged chunked prefill
+        if kd.use_pallas():
+            from repro.kernels import ops as kops
+            tk = (take if take is not None
+                  else jnp.full((q.shape[0],), q.shape[1], jnp.int32))
+            return kops.ragged_prefill_attention(q, k, v, q_off, tk,
+                                                 window=window)
+        return ragged_prefill_attention(q, k, v, pos0=q_off, take=take,
+                                        window=window)
     if kd.use_pallas() and kv_len is None and q.shape[1] > 1:
         from repro.kernels import ops as kops
         return kops.flash_attention(q, k, v, causal=causal, window=window,

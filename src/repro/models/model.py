@@ -12,7 +12,7 @@ this is what launch/dryrun.py lowers against.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,7 @@ turns the gather/scatter into all-to-all on the sharded axis.
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,6 @@ Simplifications vs the source papers (recorded in DESIGN.md):
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -109,7 +108,6 @@ def mamba2_init_cache(cfg, batch: int, dtype=jnp.float32):
 def init_mlstm(key, cfg, *, dtype=jnp.float32):
     di = cfg.d_inner
     H = cfg.n_heads
-    P = di // H
     ks = jax.random.split(key, 6)
     return {
         "up": L.dense_init(ks[0], cfg.d_model, 2 * di, dtype=dtype),

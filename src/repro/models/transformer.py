@@ -7,9 +7,7 @@ the same scan.
 """
 from __future__ import annotations
 
-import math
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -190,6 +188,24 @@ def decoder_prefill(p, cfg, batch, cache):
     return _logits(p, cfg, h[:, -1:]), {"k": ck, "v": cv}
 
 
+def _decoder_prefill_chunk_bucket(q, ck, cv, slot_idx, pos0, take, *,
+                                  window=None, kv_width=None):
+    """Gather each chunk row's bucketed cache window and attend it.
+
+    Attention is bounded to ``kv_width`` cache lines (a static bucket
+    >= max(pos0 + take)) instead of the full pool — chunk c costs
+    O(S * kv_width) — and runs through the ragged dispatch: the Pallas
+    ragged chunked-prefill kernel under ``use_pallas()``, the jnp twin
+    (``layers.ragged_prefill_attention``) otherwise.
+    """
+    w = kv_width if kv_width is not None else ck.shape[1]
+    ckg = jnp.take(ck[:, :w], slot_idx, axis=0)
+    cvg = jnp.take(cv[:, :w], slot_idx, axis=0)
+    return L._dispatch_attention(q, ckg.astype(q.dtype), cvg.astype(q.dtype),
+                                 causal=True, window=window, q_offset=pos0,
+                                 take=take)
+
+
 def decoder_layer_prefill_chunk(p_l, cfg, h, ck, cv, slot_idx, positions,
                                 pos0, take, *, window=None, kv_width=None):
     """Chunked-prefill layer step writing this layer's slot-pooled cache.
@@ -209,16 +225,8 @@ def decoder_layer_prefill_chunk(p_l, cfg, h, ck, cv, slot_idx, positions,
                             KV.expand_kv_for_cache(cfg, k).astype(ck.dtype),
                             KV.expand_kv_for_cache(cfg, v).astype(cv.dtype),
                             slot_idx, pos0, take)
-    # attend only the bucketed valid prefix (kv_width >= max(pos0+take)),
-    # not the full pool width — chunk c costs O(S * kv_width), and causal
-    # masking at per-row offsets keeps every valid query inside its own
-    # written span (the jnp path; a Pallas ragged-prefill kernel is a
-    # ROADMAP item)
-    w = kv_width if kv_width is not None else ck.shape[1]
-    ckg = jnp.take(ck[:, :w], slot_idx, axis=0)
-    cvg = jnp.take(cv[:, :w], slot_idx, axis=0)
-    out = L.attention(q, ckg.astype(q.dtype), cvg.astype(q.dtype),
-                      causal=True, window=window, q_offset=pos0)
+    out = _decoder_prefill_chunk_bucket(q, ck, cv, slot_idx, pos0, take,
+                                        window=window, kv_width=kv_width)
     g_, s_ = h.shape[:2]
     h = h + L.dense(p_l["attn"]["wo"], out.reshape(g_, s_, cfg.q_dim))
     hn = L.rms_norm(p_l["ln2"], h, cfg.norm_eps)

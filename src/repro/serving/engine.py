@@ -13,7 +13,10 @@ Hot path (dense decoders — the HybridFlow edge/cloud executor archs):
   prompts longer than ``prefill_chunk`` are processed one chunk per step
   so long prompts never stall co-resident decodes. KV lines are written
   directly into the shared slot-pooled cache via ``dynamic_update_slice``
-  — no per-request ``init_cache`` allocation, no whole-tree copy.
+  — no per-request ``init_cache`` allocation, no whole-tree copy. Under
+  ``REPRO_USE_PALLAS=1`` the chunk attention runs the ragged
+  chunked-prefill Pallas kernel (``stats["prefill_backend"]`` records
+  which backend served the last prefill call).
 * **Device-side batched sampling** — greedy/temperature sampling for all
   live slots happens inside the jitted decode/prefill step (one PRNG key
   array, one [slots] host transfer of sampled ids per step) instead of a
@@ -89,10 +92,14 @@ def _device_sample(logits, key, temps):
 
 
 @functools.lru_cache(maxsize=64)
-def _jit_steps(cfg: ModelConfig, max_len: int):
+def _jit_steps(cfg: ModelConfig, max_len: int, use_pallas: bool = False):
     """Fused decode+sample and chunk-prefill+sample steps, jitted once per
-    (config, max_len) and shared by every engine instance — compile cache
-    survives engine churn (fleet drivers build engine pairs per run)."""
+    (config, max_len, attention backend) and shared by every engine
+    instance — compile cache survives engine churn (fleet drivers build
+    engine pairs per run). ``use_pallas`` is part of the cache key because
+    the kernel dispatch is read at trace time: without it, toggling
+    ``pallas_enabled`` after a reference-path compile would silently keep
+    serving XLA programs."""
 
     def decode_fn(params, tokens, pos, cache, key, temps, live):
         # park inactive/prefilling slots at max_len-1: their garbage write
@@ -149,10 +156,16 @@ class ServingEngine:
         self._rid = 0
         self._slot_used = [False] * batch_slots
         self._prefilling: Dict[int, _PrefillJob] = {}
-        self._decode_step, self._prefill_step = _jit_steps(cfg, max_len)
         self.stats = {"tokens_out": 0, "prefill_tokens": 0, "steps": 0,
                       "slot_reuses": 0, "peak_active": 0, "requests": 0,
-                      "prefill_calls": 0, "prefill_batch_max": 0}
+                      "prefill_calls": 0, "prefill_batch_max": 0,
+                      "prefill_backend": None}
+
+    def _steps(self):
+        """Resolve the jitted step pair against the CURRENT kernel-dispatch
+        state (lru-cached, so this is a dict hit per tick)."""
+        from repro.kernels import dispatch as kd
+        return _jit_steps(self.cfg, self.max_len, kd.use_pallas())
 
     # ---- public API ---------------------------------------------------
     def submit(self, prompt: "str | List[int]", *, max_new_tokens: int = 32,
@@ -257,7 +270,10 @@ class ServingEngine:
             temps[i] = self.active[slot].temperature
         kv_width = self._bucket(int(max(pos0[i] + take[i]
                                         for i in range(g))))
-        first, self.pos, self.cache, self.key = self._prefill_step(
+        from repro.kernels import dispatch as kd
+        self.stats["prefill_backend"] = "pallas" if kd.use_pallas() else "xla"
+        _, prefill_step = self._steps()
+        first, self.pos, self.cache, self.key = prefill_step(
             self.params, jnp.asarray(tokens), jnp.asarray(slot_idx),
             jnp.asarray(pos0), jnp.asarray(np.asarray(take, np.int32)),
             self.pos, self.cache, self.key, jnp.asarray(temps), kv_width)
@@ -302,6 +318,7 @@ class ServingEngine:
             raise ValueError(f"no batch axis: {dst.shape} <- {src.shape}")
 
         self.cache = jax.tree.map(write, self.cache, cache1)
+        self.stats["prefill_backend"] = "legacy-batch1"
         n_img = self.cfg.n_image_patches if self.cfg.family == "vlm" else 0
         n = len(ids) + n_img
         self.pos = self.pos.at[slot].set(n)
@@ -331,7 +348,8 @@ class ServingEngine:
             tokens[i, 0] = self.active[i].output_ids[-1]
             temps[i] = self.active[i].temperature
             live[i] = 1
-        nxt, self.pos, self.cache, self.key = self._decode_step(
+        decode_step, _ = self._steps()
+        nxt, self.pos, self.cache, self.key = decode_step(
             self.params, jnp.asarray(tokens), self.pos, self.cache,
             self.key, jnp.asarray(temps), jnp.asarray(live))
         nxt_np = np.asarray(nxt)        # the ONE host transfer per step

@@ -26,6 +26,8 @@ from __future__ import annotations
 import os
 import zlib
 
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]
+
 try:  # pragma: no cover - exercised only where hypothesis exists
     import hypothesis.strategies as st
     from hypothesis import given, settings

@@ -5,7 +5,7 @@ import pytest
 from repro.data import tokenizer as tok
 from repro.data.pipeline import packed_batches, document_stream
 from repro.data.tasks import (gen_benchmark, make_query, WorldModel,
-                              BENCHMARKS, EDGE_PROFILE, CLOUD_PROFILE)
+                              BENCHMARKS, CLOUD_PROFILE)
 
 
 def test_tokenizer_roundtrip():
@@ -27,6 +27,7 @@ def test_packed_batches_shapes():
 def test_stream_deterministic():
     a = [next(document_stream(3)) for _ in range(3)]
     b = [next(document_stream(3)) for _ in range(3)]
+    assert a == b
     # fresh iterators with the same seed agree
     sa = document_stream(3)
     sb = document_stream(3)

@@ -3,7 +3,6 @@
 Importing repro.launch.dryrun sets XLA_FLAGS but jax is already
 initialized by conftest, so the env var has no effect here.
 """
-import pytest
 
 from repro.configs import get_config
 from repro.configs.base import SHAPES

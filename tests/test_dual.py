@@ -1,5 +1,4 @@
 """Online dual thresholding (Eq. 10-11 / Eq. 27)."""
-import numpy as np
 from _prop import given, settings, st
 
 from repro.core.dual import DualController, TwoBudgetThreshold

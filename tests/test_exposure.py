@@ -1,5 +1,4 @@
 """Privacy exposure proxy (App. D.1)."""
-import numpy as np
 
 from repro.core.exposure import exposure, mean_exposure
 from repro.core.hybridflow import Pipeline

@@ -1,4 +1,6 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + properties."""
+import zlib
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -33,7 +35,8 @@ FLASH_CASES = [
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_flash_attention_sweep(case, dtype):
     B, Sq, Sk, H, KV, hd, causal, window = case
-    ks = jax.random.split(jax.random.PRNGKey(hash(case) % 2**31), 3)
+    # crc32, not hash(): tuples holding None hash process-randomized < 3.12
+    ks = jax.random.split(jax.random.PRNGKey(zlib.crc32(repr(case).encode())), 3)
     q = _rand(ks[0], (B, Sq, H, hd), dtype)
     k = _rand(ks[1], (B, Sk, KV, hd), dtype)
     v = _rand(ks[2], (B, Sk, KV, hd), dtype)
@@ -90,7 +93,7 @@ DECODE_CASES = [
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_decode_attention_sweep(case, dtype):
     B, H, KV, hd, M = case
-    ks = jax.random.split(jax.random.PRNGKey(hash(case) % 2**31), 3)
+    ks = jax.random.split(jax.random.PRNGKey(zlib.crc32(repr(case).encode())), 3)
     q = _rand(ks[0], (B, 1, H, hd), dtype)
     k = _rand(ks[1], (B, M, KV, hd), dtype)
     v = _rand(ks[2], (B, M, KV, hd), dtype)

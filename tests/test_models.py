@@ -8,7 +8,7 @@ import pytest
 
 from repro.configs import ARCH_IDS, get_config
 from repro.models import model as M
-from repro.training.loop import make_train_step, init_train_state, TrainConfig
+from repro.training.loop import make_train_step, init_train_state
 
 
 def _batch(cfg, B=2, S=16, key=None):

@@ -2,11 +2,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.models import model as M
-from repro.models import layers as L
 
 
 def test_blocked_attention_model_parity():

@@ -1,5 +1,4 @@
 """Intrinsic plan-quality framework (App. D / Fig. 5)."""
-import numpy as np
 
 from repro.core.plan_quality import score_plan, mean_quality
 from repro.core.planner import SyntheticPlanner, CorruptionRates

@@ -6,8 +6,7 @@ import pytest
 from _prop import given, settings, st
 
 from repro.core.dag import validate, compression_ratio
-from repro.core.planner import (SyntheticPlanner, parse_plan, plan_to_xml,
-                                decompose)
+from repro.core.planner import SyntheticPlanner, parse_plan, plan_to_xml
 from repro.data.tasks import gen_benchmark
 
 

@@ -4,7 +4,7 @@ import numpy as np
 from repro.core import embeddings as E
 from repro.core.profiler import (profile_queries, build_training_set,
                                  train_default_router)
-from repro.core.router import RouterConfig, Router, train_router, make_features
+from repro.core.router import RouterConfig, Router, train_router
 from repro.data.tasks import gen_benchmark, WorldModel
 
 

@@ -1,9 +1,7 @@
 """Dependency-triggered scheduler (Algorithm 1 Stage 2) invariants."""
-import numpy as np
 import pytest
 
 from repro.core.hybridflow import Pipeline, StaticPolicy, RandomPolicy
-from repro.core.planner import SyntheticPlanner
 from repro.core.scheduler import (FleetScheduler, run_query, Schedule,
                                   WorldModelExecutor)
 from repro.core.dag import Node, PlanDAG, topological_order

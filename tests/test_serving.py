@@ -60,8 +60,8 @@ def test_rolling_window_cache_equivalence():
 def test_engine_batched_requests(model_zoo):
     cfg, params = model_zoo("qwen2-1.5b")
     eng = ServingEngine(cfg, params, batch_slots=2, max_len=96)
-    reqs = [eng.submit(f"request number {i}", max_new_tokens=6)
-            for i in range(5)]
+    for i in range(5):
+        eng.submit(f"request number {i}", max_new_tokens=6)
     done = eng.run_until_done()
     assert len(done) == 5
     assert all(r.done and len(r.output_ids) >= 1 for r in done)
