@@ -3,18 +3,23 @@
 Diffs a freshly produced ``BENCH_serve.json`` against the committed
 ``benchmarks/baseline_serve.json`` and exits non-zero when any comparable
 mode regresses beyond tolerance — qps for the scheduler/runtime rows,
-``prefill_tok_per_s`` for the prefill-microbench rows. CI runs it with
-``continue-on-error: true`` (shared runners are noisy and the real-engine
-rows are wall-clock), so a regression fails loudly in the log/annotations
-without gating the PR.
+``prefill_tok_per_s`` for the prefill-microbench rows.
 
-Tolerances: analytic rows are simulated (deterministic up to scheduler
-tie-breaks) and use ``--tolerance`` (default 20%); ``real-*`` and
-``prefill-*`` rows are wall-clock on whatever machine ran them and use
-the looser ``--real-tolerance`` (default 60%).
+Rows come in two classes, selectable with ``--only``:
+
+* **analytic** — simulated-clock scheduler/runtime rows (``sequential``,
+  ``concurrent-*``). Deterministic up to scheduler tie-breaks, so their
+  qps diff GATES CI (a drop beyond ``--tolerance``, default 20%, fails
+  the job on any machine).
+* **wallclock** — ``real-*`` and ``prefill-*`` rows measured on whatever
+  machine ran them. CI checks these with ``continue-on-error: true``
+  (shared runners are noisy) and the looser ``--real-tolerance``
+  (default 60%): a regression fails loudly in the log/annotations
+  without gating the PR.
 
 ``PYTHONPATH=src python -m benchmarks.check_bench [--current PATH]
-[--baseline PATH] [--tolerance 0.2] [--real-tolerance 0.6]``
+[--baseline PATH] [--only analytic|wallclock] [--tolerance 0.2]
+[--real-tolerance 0.6]``
 
 Refresh the baseline by committing a new ``benchmarks/baseline_serve.json``
 produced by ``benchmarks.serve_throughput`` with the CI arguments
@@ -43,8 +48,12 @@ def _metric(row):
     return None, None
 
 
+def _is_wallclock(mode: str) -> bool:
+    return mode.startswith(("real-", "prefill-"))
+
+
 def check(current: str, baseline: str, tolerance: float,
-          real_tolerance: float) -> int:
+          real_tolerance: float, only: str = None) -> int:
     if not os.path.exists(baseline):
         print(f"no baseline at {baseline}; nothing to compare")
         return 0
@@ -54,8 +63,14 @@ def check(current: str, baseline: str, tolerance: float,
         return 1
     cur = _load(current)
     base = _load(baseline)
+    if only is not None:
+        want = (lambda m: _is_wallclock(m)) if only == "wallclock" \
+            else (lambda m: not _is_wallclock(m))
+        base = {m: r for m, r in base.items() if want(m)}
+        cur = {m: r for m, r in cur.items() if want(m)}
 
     regressions = []
+    compared = 0
     print(f"{'mode':<24} {'metric':<18} {'baseline':>12} {'current':>12} "
           f"{'delta':>8}")
     for mode, brow in sorted(base.items()):
@@ -66,17 +81,27 @@ def check(current: str, baseline: str, tolerance: float,
         cval = crow.get(name)
         if not isinstance(cval, (int, float)):
             continue
+        compared += 1
         delta = (cval - bval) / bval
-        tol = (real_tolerance if mode.startswith(("real-", "prefill-"))
-               else tolerance)
+        tol = real_tolerance if _is_wallclock(mode) else tolerance
         flag = " <-- REGRESSION" if delta < -tol else ""
         print(f"{mode:<24} {name:<18} {bval:>12.3f} {cval:>12.3f} "
               f"{delta:>7.1%}{flag}")
         if flag:
             regressions.append((mode, name, bval, cval, delta))
 
+    # a gate that compares nothing gates nothing: renamed/dropped modes
+    # must fail loudly instead of silently passing the check
     missing = sorted(set(base) - set(cur))
+    if base and compared == 0:
+        print(f"\nFAIL: baseline has {len(base)} mode(s) but none were "
+              f"comparable in the current run (renamed modes?)")
+        return 1
     if missing:
+        if only is not None:
+            print(f"\nFAIL: --only {only} baseline modes absent from the "
+                  f"current run: {missing}")
+            return 1
         print(f"note: modes in baseline but not in current run: {missing}")
     if regressions:
         print(f"\nFAIL: {len(regressions)} mode(s) regressed beyond "
@@ -97,9 +122,13 @@ def main():
     ap.add_argument("--real-tolerance", type=float, default=0.6,
                     help="allowed fractional drop for wall-clock rows "
                          "(real-* engine modes, prefill-* microbench)")
+    ap.add_argument("--only", choices=["analytic", "wallclock"],
+                    default=None,
+                    help="restrict the diff to one row class (CI gates "
+                         "analytic, warns on wallclock)")
     args = ap.parse_args()
     sys.exit(check(args.current, args.baseline, args.tolerance,
-                   args.real_tolerance))
+                   args.real_tolerance, args.only))
 
 
 if __name__ == "__main__":

@@ -17,16 +17,27 @@ Real-engine section: the same fleet drives a ``JAXExecutor`` pair
   the same micro-batches via batched chunked prefill + batched decode.
 
 The pump mode must beat the synchronous wall-clock by >= 1.3x (the
-overlap is the whole point). A third section microbenches the ragged
-chunked-prefill attention op itself — jnp reference twin vs the Pallas
-kernel (``prefill-ref`` / ``prefill-pallas`` rows). Results are also
-written as machine-readable ``BENCH_serve.json`` rows ``{mode, qps, p50,
-p99, prefill_tokens, peak_active, ...}`` for the cross-PR perf
-trajectory (diffed against ``benchmarks/baseline_serve.json`` by
-``benchmarks/check_bench.py`` in CI).
+overlap is the whole point).
+
+Pooled-cloud section: the same pumped fleet drives a cloud that is
+either ONE serving engine (``real-cloud-single`` — the pre-pool shape,
+capacity = its slot count) or an ``EnginePool`` of R replicas
+(``real-cloud-poolR`` — capacity R x slots, least-loaded dispatch,
+launch-all/commit-all pump passes). The pooled cloud must beat the
+single engine on concurrent fleet wall-clock: extra replica slots drain
+the cloud backlog sooner and each pass overlaps one replica's host
+bookkeeping with another's device compute.
+
+A final section microbenches the ragged chunked-prefill attention op
+itself — jnp reference twin vs the Pallas kernel (``prefill-ref`` /
+``prefill-pallas`` rows). Results are also written as machine-readable
+``BENCH_serve.json`` rows ``{mode, qps, p50, p99, prefill_tokens,
+peak_active, ...}`` for the cross-PR perf trajectory (diffed against
+``benchmarks/baseline_serve.json`` by ``benchmarks/check_bench.py`` in
+CI — the analytic rows gate, the wall-clock rows warn).
 
 ``PYTHONPATH=src python -m benchmarks.serve_throughput [--queries N]
-[--real-queries M] [--json PATH]``
+[--real-queries M] [--pool-queries K] [--json PATH]``
 """
 from __future__ import annotations
 
@@ -146,6 +157,99 @@ def run_real(n_queries=6, bench="gpqa", *, arch="qwen2-1.5b",
     return rows, speedup
 
 
+class _CloudBoundPolicy:
+    """Every subtask to the cloud: the pooled section measures how cloud
+    capacity scales, so the fleet must actually saturate the cloud pool
+    (a mixed policy stalls on the 1-wide edge at every DAG root and the
+    cloud never backs up)."""
+
+    def decide(self, query, node, ctx):
+        return 1, {}
+
+    def observe(self, query, node, r, result, ctx):
+        pass
+
+
+def run_pool(n_queries=12, bench="gpqa", *, arch="qwen2-1.5b", replicas=2,
+             slots=4, max_inflight=None):
+    """Pooled-vs-single cloud under the pumped fleet: the same cloud
+    engine shape as ``run_real`` (``slots`` KV slots) either alone (the
+    pre-pool single cloud engine) or sharded across ``replicas``
+    EnginePool replicas, drained by a cloud-bound query stream deep
+    enough to keep every replica's slots leased."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.core.planner import SyntheticPlanner
+    from repro.data.tasks import WorldModel, gen_benchmark
+    from repro.models import model as M
+    from repro.serving.engine import JAXExecutor, ServingEngine
+    from repro.serving.pool import EnginePool
+
+    if replicas < 2:
+        raise ValueError("run_pool compares a pooled cloud against the "
+                         "single engine; needs replicas >= 2")
+    cfg = get_config(arch).reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    wm = WorldModel()
+    qs = gen_benchmark(bench, n_queries)
+    max_inflight = max_inflight or n_queries
+
+    def serve(R):
+        edge_e = ServingEngine(cfg, params, batch_slots=2, max_len=160,
+                               prefill_chunk=64)
+        if R == 1:   # the existing single-engine cloud path, unpooled
+            cloud_eng = ServingEngine(cfg, params, batch_slots=slots,
+                                      max_len=160, prefill_chunk=64)
+        else:
+            cloud_eng = EnginePool.replicate(cfg, params, replicas=R,
+                                             batch_slots=slots, max_len=160,
+                                             prefill_chunk=64)
+        edge = JAXExecutor(edge_e, wm, cloud=False, concurrency=1)
+        cloud = JAXExecutor(cloud_eng, wm, cloud=True, price_out=3.2e-5)
+        rt = ServingRuntime(edge, cloud, _CloudBoundPolicy(),
+                            planner=SyntheticPlanner(),
+                            max_inflight=max_inflight, pump=True)
+        rep = rt.serve(qs)
+        return rep, cloud_eng
+
+    # one warm-up pays every jit compile for BOTH modes: _jit_steps is a
+    # module-level cache keyed on (cfg, max_len, backend), which single
+    # engine and pool replicas share (same shapes throughout)
+    serve(replicas)
+    rows = []
+    for mode, R in (("real-cloud-single", 1),
+                    (f"real-cloud-pool{replicas}", replicas)):
+        rep, cloud_eng = serve(R)
+        stats = cloud_eng.stats
+        rows.append({
+            "mode": mode,
+            "queries": n_queries,
+            "cloud_replicas": R,
+            "cloud_capacity": cloud_eng.capacity,
+            "qps": rep.n / rep.wall_s if rep.wall_s > 0 else 0.0,
+            "p50": rep.p50_latency,
+            "p99": rep.p99_latency,
+            "wall_s": rep.wall_s,
+            # per-replica high-water marks (their sum can overstate true
+            # concurrency; the per-replica list is the honest evidence
+            # that every replica's slots were leased)
+            "replica_peak_active": [o["peak_active"]
+                                    for o in cloud_eng.occupancy()]
+            if hasattr(cloud_eng, "occupancy")
+            else [stats["peak_active"]],
+            "replica_requests": rep.stats.get("cloud_replica_requests",
+                                              [stats["requests"]]),
+        })
+    speedup = rows[0]["wall_s"] / max(rows[1]["wall_s"], 1e-9)
+    # every replica must have taken work (least-loaded dispatch spreads
+    # a saturating fleet across the whole pool)
+    assert all(n > 0 for n in rows[1]["replica_requests"]), \
+        rows[1]["replica_requests"]
+    return rows, speedup
+
+
 def run_prefill_microbench(*, G=4, S=64, W=256, H=4, KV=2, hd=64, iters=3):
     """Ref-vs-kernel ragged chunked-prefill attention microbench.
 
@@ -201,6 +305,12 @@ def main():
                     help="analytic-section query count")
     ap.add_argument("--real-queries", type=int, default=6,
                     help="real-engine-section query count (0 disables)")
+    ap.add_argument("--pool-queries", type=int, default=12,
+                    help="pooled-vs-single cloud section query count "
+                         "(0 disables; needs to be deep enough to keep "
+                         "every replica's slots leased)")
+    ap.add_argument("--pool-replicas", type=int, default=2,
+                    help="cloud pool replicas for the pooled section")
     ap.add_argument("--benchmark", default="gpqa")
     ap.add_argument("--json", default="BENCH_serve.json",
                     help="machine-readable output path ('' disables)")
@@ -231,6 +341,21 @@ def main():
             print(f"WARNING: pump speedup {speedup:.2f}x below "
                   f"{MIN_REAL_SPEEDUP}x target")
         json_rows += real_rows
+
+    if args.pool_queries > 0:
+        pool_rows, pspeed = run_pool(args.pool_queries, args.benchmark,
+                                     replicas=args.pool_replicas)
+        C.print_csv("serve_cloud_pool",
+                    list(pool_rows[0].keys()),
+                    [list(r.values()) for r in pool_rows])
+        print(f"\npooled-cloud speedup: {pspeed:.2f}x wall-clock over the "
+              f"single cloud engine (R={args.pool_replicas}, "
+              f"capacity {pool_rows[1]['cloud_capacity']} vs "
+              f"{pool_rows[0]['cloud_capacity']})")
+        if pspeed < 1.0:
+            print(f"WARNING: pooled cloud did not beat the single engine "
+                  f"({pspeed:.2f}x)")
+        json_rows += pool_rows
 
     if args.prefill_iters > 0:
         pf_rows = run_prefill_microbench(iters=args.prefill_iters)

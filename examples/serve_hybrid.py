@@ -28,6 +28,10 @@ device inside the jitted step (one host transfer of token ids per step).
     # cap fleet-wide API spend; exhaustion forces edge execution
     PYTHONPATH=src python examples/serve_hybrid.py --global-k-max 0.01
 
+    # shard the cloud engine across 2 pool replicas (shared params,
+    # independent KV slot pools; cloud concurrency = replicas x slots)
+    PYTHONPATH=src python examples/serve_hybrid.py --cloud-replicas 2
+
 The printed report includes fleet throughput, p50/p99 per-query
 makespan, accuracy and API cost, plus the engines' counters —
 ``slot_reuses`` > 0 shows requests recycling the bounded cache pool,
@@ -81,6 +85,8 @@ def main():
     ap.add_argument("--edge-arch", default=PAPER_EDGE_ARCH)
     ap.add_argument("--cloud-arch", default=PAPER_CLOUD_ARCH)
     ap.add_argument("--max-inflight", type=int, default=8)
+    ap.add_argument("--cloud-replicas", type=int, default=1,
+                    help="shard the cloud engine across R pool replicas")
     ap.add_argument("--global-k-max", type=float, default=None)
     ap.add_argument("--sequential", action="store_true")
     ap.add_argument("--no-pump", action="store_true",
@@ -94,15 +100,17 @@ def main():
     edge_engine = build_engine(args.edge_arch, 1, 0, batch_slots=2)
     cloud_engine = build_engine(args.cloud_arch, 2, 1, batch_slots=4)
     edge = JAXExecutor(edge_engine, wm, cloud=False, concurrency=1)
-    cloud = JAXExecutor(cloud_engine, wm, cloud=True, concurrency=4,
-                        price_out=3.2e-5)
+    # concurrency derives from capacity; --cloud-replicas scales this
+    # executor out to an EnginePool inside the runtime
+    cloud = JAXExecutor(cloud_engine, wm, cloud=True, price_out=3.2e-5)
 
     router, _ = train_default_router(n_queries=100, epochs=60)
     policy = HybridFlowPolicy(router, wm=wm)
     runtime = ServingRuntime(edge, cloud, policy, planner=SyntheticPlanner(),
                              max_inflight=args.max_inflight,
                              global_k_max=args.global_k_max,
-                             pump=False if args.no_pump else None)
+                             pump=False if args.no_pump else None,
+                             replicas=args.cloud_replicas)
 
     qs = gen_benchmark("gpqa", args.queries)
     t0 = time.time()
@@ -118,7 +126,13 @@ def main():
          f"(max_inflight={args.max_inflight})")
     print(f"\n[{mode}] {report.summary()} | real {time.time()-t0:.1f}s")
     print(f"edge engine: {edge_engine.stats}")
-    print(f"cloud engine: {cloud_engine.stats}")
+    cloud_eng = runtime.cloud.engine     # EnginePool when replicas > 1
+    print(f"cloud engine: {cloud_eng.stats}")
+    if hasattr(cloud_eng, "occupancy"):
+        for o in cloud_eng.occupancy():
+            print(f"  cloud replica {o['replica']}: "
+                  f"requests={o['requests']} "
+                  f"peak_active={o['peak_active']}/{o['slots']}")
 
 
 if __name__ == "__main__":

@@ -133,6 +133,15 @@ class WorldModelExecutor:
                              answer=f"[{prof.name}] answer r{st.sid}")
 
 
+def _saturated(ex: Executor) -> bool:
+    """Whether an executor's real backing capacity is exhausted. Engine-
+    backed executors expose ``saturated()`` (live KV-slot occupancy across
+    every pool replica); analytic executors don't, and for them hitting
+    the busy-count cap IS saturation."""
+    sat = getattr(ex, "saturated", None)
+    return True if sat is None else bool(sat())
+
+
 def _subtask_of(query: Query, node: Node) -> Subtask:
     for st in query.subtasks:
         if st.sid == node.sid:
@@ -306,13 +315,17 @@ class FleetScheduler:
                 qs.ready.append(qs.dag.node(c))
         qs.n_done += 1
 
-    def _make_loop(self, st: "_LoopState", dispatch_action):
+    def _make_loop(self, st: "_LoopState", dispatch_action,
+                   live_saturation: bool = False):
         """Build the admission/routing/dispatch closures shared by both
         event-loop drivers; only the dispatch *action* differs (sim:
         ``ex.run`` + heap push; pump: ``ex.submit`` into the engine).
         Keeping these in one place is what preserves the forced-edge
         budget rule, spill policy and round-robin fairness as a single
-        behavior across drivers."""
+        behavior across drivers. ``live_saturation`` (pump driver only)
+        additionally gates spill on the executor's real slot occupancy —
+        meaningless under the sim driver, whose requests never stay
+        resident in an engine between dispatches."""
 
         def admit_next():
             while st.backlog and (self.max_inflight is None
@@ -347,9 +360,18 @@ class FleetScheduler:
             for j, (r, node) in enumerate(qs.waiting):
                 ex = self.cloud if r else self.edge
                 if st.busy[id(ex)] >= ex.concurrency:
+                    # pumped driver: spill-to-edge fires only when the
+                    # cloud is REALLY out of capacity — engine-backed
+                    # executors report live slot occupancy via
+                    # saturated() (a replica pool is saturated only
+                    # when EVERY replica is full). Sim driver and
+                    # executors without the hook: hitting the busy-count
+                    # cap (the check that just failed above) IS
+                    # saturation
                     if not (self.spill_to_edge and r == 1
                             and st.busy[id(self.edge)]
-                            < self.edge.concurrency):
+                            < self.edge.concurrency
+                            and (not live_saturation or _saturated(ex))):
                         continue
                     ex, r = self.edge, 0
                     qs.offload[node.sid] = 0
@@ -435,7 +457,7 @@ class FleetScheduler:
             inflight.append([fut, qs, node, r, ex, st.clock])
 
         admit_next, route_ready, dispatch_all = self._make_loop(
-            st, dispatch_action)
+            st, dispatch_action, live_saturation=True)
         admit_next()
         dispatch_all()
         while inflight:
@@ -448,6 +470,13 @@ class FleetScheduler:
                 res = row[4].poll(row[0])
                 if res is not None:
                     done_rows.append((row, res))
+            # same-tick completions are observed in (qid, sid) order, not
+            # engine-poll order: policies shared across the fleet (e.g. a
+            # HybridFlowPolicy LinUCB calibrator) then see an update
+            # sequence that is stable across runs/replica counts even
+            # when co-batched subtasks finish on the same pump pass
+            done_rows.sort(key=lambda dr: (dr[0][1].query.qid,
+                                           dr[0][2].sid))
             if not done_rows:
                 if not stepped:
                     raise RuntimeError(

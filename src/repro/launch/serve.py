@@ -6,10 +6,12 @@ subtasks share the edge engine's KV slots and the cloud pool via the
 fleet scheduler's async pump loop — every dispatch ``submit``s into a
 real engine, the loop keeps stepping both engines while routing
 continues, and co-scheduled subtasks decode in the same micro-batches
-(batched chunked prefill + batched device-side sampling). ``--no-pump``
-forces the old synchronous per-subtask dispatch; ``--sequential``
-restores the seed's one-query-at-a-time loop; ``--global-k-max`` caps
-fleet-wide API spend.
+(batched chunked prefill + batched device-side sampling).
+``--cloud-replicas R`` shards the cloud engine across an R-replica
+``EnginePool`` (least-loaded dispatch, cloud concurrency = replicas x
+slots); ``--no-pump`` forces the old synchronous per-subtask dispatch;
+``--sequential`` restores the seed's one-query-at-a-time loop;
+``--global-k-max`` caps fleet-wide API spend.
 
 On TPU the cloud engine would run the large model on the production mesh;
 on this container both engines run reduced configs on CPU (same code).
@@ -46,6 +48,10 @@ def main():
     ap.add_argument("--k-max", type=float, default=0.04)
     ap.add_argument("--max-inflight", type=int, default=8,
                     help="concurrently admitted queries (fleet admission)")
+    ap.add_argument("--cloud-replicas", type=int, default=1,
+                    help="shard the cloud engine across R pool replicas "
+                         "(shared params, independent KV slot pools); "
+                         "cloud concurrency becomes replicas x slots")
     ap.add_argument("--global-k-max", type=float, default=None,
                     help="fleet-wide API $ cap; forces edge when exhausted")
     ap.add_argument("--sequential", action="store_true",
@@ -72,8 +78,9 @@ def main():
                                  dtype=jnp.float32),
         batch_slots=4, max_len=192, prefill_chunk=args.prefill_chunk)
     edge = JAXExecutor(edge_engine, wm, cloud=False, concurrency=1)
-    cloud = JAXExecutor(cloud_engine, wm, cloud=True, concurrency=4,
-                        price_out=3.2e-5)
+    # concurrency derives from engine capacity; with --cloud-replicas the
+    # runtime scales this executor out to an EnginePool (replicas x slots)
+    cloud = JAXExecutor(cloud_engine, wm, cloud=True, price_out=3.2e-5)
 
     print("warm-starting router from offline profiling...")
     router, info = train_default_router(n_queries=120, epochs=60)
@@ -86,7 +93,8 @@ def main():
     runtime = ServingRuntime(edge, cloud, policy, planner=SyntheticPlanner(),
                              max_inflight=args.max_inflight,
                              global_k_max=args.global_k_max,
-                             pump=False if args.no_pump else None)
+                             pump=False if args.no_pump else None,
+                             replicas=args.cloud_replicas)
 
     qs = gen_benchmark(args.benchmark, args.queries)
     t0 = time.time()
@@ -109,7 +117,13 @@ def main():
     if report.stats.get("forced_edge"):
         print(f"global budget forced {report.stats['forced_edge']} "
               f"subtasks onto the edge")
-    print(f"edge: {edge_engine.stats} | cloud: {cloud_engine.stats}")
+    cloud_eng = runtime.cloud.engine     # EnginePool when replicas > 1
+    print(f"edge: {edge_engine.stats} | cloud: {cloud_eng.stats}")
+    if hasattr(cloud_eng, "occupancy"):
+        for o in cloud_eng.occupancy():
+            print(f"  cloud replica {o['replica']}: requests={o['requests']} "
+                  f"peak_active={o['peak_active']}/{o['slots']} "
+                  f"slot_reuses={o['slot_reuses']}")
 
 
 if __name__ == "__main__":

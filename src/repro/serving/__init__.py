@@ -1,0 +1,8 @@
+"""Real-model serving: slot-batched engines, replicated engine pools,
+the Executor adapter and the multi-query fleet runtime."""
+from repro.serving.engine import JAXExecutor, Request, ServingEngine
+from repro.serving.pool import EnginePool
+from repro.serving.runtime import RuntimeReport, ServingRuntime
+
+__all__ = ["EnginePool", "JAXExecutor", "Request", "RuntimeReport",
+           "ServingEngine", "ServingRuntime"]

@@ -30,11 +30,22 @@ audio / hybrid / ssm: prefix or recurrent state) fall back to the legacy
 per-slot batch-1 prefill, which is kept as the reference path
 (``batched_prefill=False`` forces it for any family).
 
-``JAXExecutor`` adapts an engine pair to HybridFlow's Executor protocol
-so the paper's scheduler can drive *real* JAX models. It exposes both the
-synchronous ``run`` and the async ``submit``/``poll``/``pump`` surface
-the fleet scheduler's pump loop uses to overlap subtasks from different
-queries in the same micro-batches (examples/serve_hybrid).
+Engine steps are split into a *launch* phase (host builds inputs and
+issues the jitted call — JAX dispatch is async) and a *commit* phase
+(the one host transfer + request bookkeeping). ``step`` runs both
+back-to-back; ``repro.serving.pool.EnginePool`` launches every replica
+before committing any, so one replica's host-side commit overlaps the
+next replica's device compute.
+
+``JAXExecutor`` adapts an engine — or an ``EnginePool`` of replicas —
+to HybridFlow's Executor protocol so the paper's scheduler can drive
+*real* JAX models. It exposes both the synchronous ``run`` and the async
+``submit``/``poll``/``pump`` surface the fleet scheduler's pump loop
+uses to overlap subtasks from different queries in the same
+micro-batches (examples/serve_hybrid). When no explicit ``concurrency``
+is given it derives from the backing engine's capacity (pool: replicas ×
+slots), and ``saturated()`` reports live slot occupancy so the fleet's
+cloud→edge spill only fires when every replica is really full.
 """
 from __future__ import annotations
 
@@ -79,6 +90,23 @@ class _PrefillJob:
     @property
     def remaining(self) -> int:
         return len(self.ids) - self.off
+
+
+@dataclass
+class _PrefillPass:
+    """In-flight prefill launch awaiting its host commit."""
+
+    jobs: List            # [(slot, _PrefillJob)] in slot order
+    take: List[int]
+    first: object         # device array of first sampled ids [G]
+
+
+@dataclass
+class _DecodePass:
+    """In-flight decode launch awaiting its host commit."""
+
+    live_slots: List[int]
+    nxt: object           # device array of sampled ids [slots]
 
 
 def _device_sample(logits, key, temps):
@@ -141,6 +169,13 @@ class ServingEngine:
         self.slots = batch_slots
         self.max_len = max_len
         self.dtype = dtype
+        self.seed = seed
+        # raw ctor args so EnginePool can clone replicas (shared params,
+        # independent KV slot pools); batched_prefill below is ANDed with
+        # the family gate, so keep the caller's value here
+        self._ctor_kw = dict(batch_slots=batch_slots, max_len=max_len,
+                             dtype=dtype, prefill_chunk=prefill_chunk,
+                             batched_prefill=batched_prefill)
         self.key = jax.random.PRNGKey(seed)
         self.cache = M.init_cache(cfg, batch_slots, max_len, dtype=dtype)
         # device-resident next positions (int32), parked at max_len-1 for
@@ -167,6 +202,13 @@ class ServingEngine:
         from repro.kernels import dispatch as kd
         return _jit_steps(self.cfg, self.max_len, kd.use_pallas())
 
+    def clone(self, *, seed: Optional[int] = None) -> "ServingEngine":
+        """A fresh engine over the SAME config and params (no re-init)
+        with its own KV slot pool — the EnginePool replica constructor."""
+        return ServingEngine(self.cfg, self.params,
+                             seed=self.seed if seed is None else seed,
+                             **self._ctor_kw)
+
     # ---- public API ---------------------------------------------------
     def submit(self, prompt: "str | List[int]", *, max_new_tokens: int = 32,
                temperature: float = 0.0) -> Request:
@@ -187,6 +229,24 @@ class ServingEngine:
     @property
     def has_work(self) -> bool:
         return bool(self.queue) or any(a is not None for a in self.active)
+
+    @property
+    def capacity(self) -> int:
+        """KV slots this engine can decode concurrently (pool symmetry)."""
+        return self.slots
+
+    @property
+    def load(self) -> int:
+        """Requests holding or waiting on a slot (active + queued)."""
+        return self.n_active + len(self.queue)
+
+    def pump(self) -> bool:
+        """Advance one step if there is work. Returns progress (the same
+        surface ``EnginePool.pump`` exposes for a whole replica set)."""
+        if self.has_work:
+            self.step()
+            return True
+        return False
 
     def run_until_done(self, max_steps: int = 10_000) -> List[Request]:
         done: List[Request] = []
@@ -249,11 +309,13 @@ class ServingEngine:
             b *= 2
         return min(b, self.max_len)
 
-    def _prefill_tick(self) -> None:
-        """Advance every prefilling slot by one chunk — a single padded
-        ``serve_prefill_chunk`` call for the whole group."""
+    def _prefill_launch(self) -> Optional[_PrefillPass]:
+        """Launch one chunk for every prefilling slot — a single padded
+        ``serve_prefill_chunk`` call for the whole group. Host bookkeeping
+        is deferred to ``_prefill_commit`` so a pool can overlap another
+        replica's launch with this one's device compute."""
         if not self._prefilling:
-            return
+            return None
         jobs = sorted(self._prefilling.items())
         chunk = self.prefill_chunk or self.max_len
         take = [min(j.remaining, chunk) for _, j in jobs]
@@ -277,13 +339,18 @@ class ServingEngine:
             self.params, jnp.asarray(tokens), jnp.asarray(slot_idx),
             jnp.asarray(pos0), jnp.asarray(np.asarray(take, np.int32)),
             self.pos, self.cache, self.key, jnp.asarray(temps), kv_width)
-        first_np = np.asarray(first)
         self.stats["prefill_calls"] += 1
         self.stats["prefill_batch_max"] = max(
             self.stats["prefill_batch_max"], g)
-        for i, (slot, j) in enumerate(jobs):
-            j.off += take[i]
-            self.stats["prefill_tokens"] += take[i]
+        return _PrefillPass(jobs, take, first)
+
+    def _prefill_commit(self, p: _PrefillPass) -> None:
+        """Sync the launched prefill chunk and advance the per-slot jobs
+        (first sampled token, slot positions, finished-job retirement)."""
+        first_np = np.asarray(p.first)
+        for i, (slot, j) in enumerate(p.jobs):
+            j.off += p.take[i]
+            self.stats["prefill_tokens"] += p.take[i]
             if j.remaining == 0:
                 self.active[slot].output_ids.append(int(first_np[i]))
                 self._pos_np[slot] = len(j.ids)
@@ -335,12 +402,13 @@ class ServingEngine:
         return int(jax.random.categorical(
             k, jnp.asarray(logits) / req.temperature))
 
-    def _decode_tick(self) -> List[Request]:
-        """One decode token for every live (fully prefilled) slot."""
+    def _decode_launch(self) -> Optional[_DecodePass]:
+        """Launch one decode token for every live (fully prefilled) slot;
+        host bookkeeping is deferred to ``_decode_commit``."""
         live_slots = [i for i, r in enumerate(self.active)
                       if r is not None and i not in self._prefilling]
         if not live_slots:
-            return []
+            return None
         tokens = np.zeros((self.slots, 1), np.int32)
         temps = np.zeros(self.slots, np.float32)
         live = np.zeros(self.slots, np.int32)
@@ -352,9 +420,13 @@ class ServingEngine:
         nxt, self.pos, self.cache, self.key = decode_step(
             self.params, jnp.asarray(tokens), self.pos, self.cache,
             self.key, jnp.asarray(temps), jnp.asarray(live))
-        nxt_np = np.asarray(nxt)        # the ONE host transfer per step
+        return _DecodePass(live_slots, nxt)
+
+    def _decode_commit(self, d: _DecodePass) -> List[Request]:
+        """Sync the launched decode step and retire finished requests."""
+        nxt_np = np.asarray(d.nxt)      # the ONE host transfer per step
         finished: List[Request] = []
-        for i in live_slots:
+        for i in d.live_slots:
             req = self.active[i]
             req.output_ids.append(int(nxt_np[i]))
             self._pos_np[i] += 1
@@ -375,8 +447,11 @@ class ServingEngine:
         slots (prefill and decode of co-resident requests interleave, so
         a long prompt never stalls running generations)."""
         self._admit()
-        self._prefill_tick()
-        return self._decode_tick()
+        p = self._prefill_launch()
+        if p is not None:
+            self._prefill_commit(p)
+        d = self._decode_launch()
+        return self._decode_commit(d) if d is not None else []
 
 
 @dataclass
@@ -393,15 +468,15 @@ class _Inflight:
 
 
 class JAXExecutor:
-    """HybridFlow Executor backed by a real ServingEngine.
+    """HybridFlow Executor backed by a real ServingEngine or EnginePool.
 
     Correctness still comes from the world model (we cannot grade free-form
     text without a verifier), but latency is *measured* wall-clock of real
     model execution, and cost is token-metered from real token counts —
     the integration point the paper's 'system shifts' calibration needs.
 
-    One executor (and its engine) is shared by *all* queries in a fleet:
-    each subtask leases a KV slot from the engine's fixed pool. Two ways
+    One executor (and its engine/pool) is shared by *all* queries in a
+    fleet: each subtask leases a KV slot from a fixed slot pool. Two ways
     to drive it:
 
     * ``run`` — synchronous: submits and steps the engine until the
@@ -409,19 +484,40 @@ class JAXExecutor:
       only arises from engine-level callers.
     * ``submit``/``poll``/``pump`` — the async surface the fleet
       scheduler's pump loop uses: ``submit`` enqueues and returns a
-      future, ``pump`` advances the engine one step, ``poll`` collects a
-      finished future. Subtasks from different queries submitted before
-      the next pump decode in the SAME micro-batches, so wall-clock
-      tracks the simulated makespan instead of serializing.
+      future, ``pump`` advances the engine (every pool replica with
+      pending work) one step, ``poll`` collects a finished future.
+      Subtasks from different queries submitted before the next pump
+      decode in the SAME micro-batches, so wall-clock tracks the
+      simulated makespan instead of serializing.
+
+    ``concurrency=None`` derives the dispatch width from the backing
+    capacity — ``slots`` for a single engine, ``replicas × slots`` for an
+    ``EnginePool`` — so the fleet scheduler admits exactly as many
+    subtasks as there are KV slots. ``saturated()`` reports live slot
+    occupancy: the scheduler's cloud→edge spill consults it so spill only
+    fires when *every* replica is really full, not merely when the
+    scheduler's own busy count hit an explicit (possibly narrower)
+    ``concurrency`` cap.
     """
 
-    def __init__(self, engine: ServingEngine, wm, cloud: bool,
-                 concurrency: int = 1, price_out: float = 0.0):
+    def __init__(self, engine, wm, cloud: bool,
+                 concurrency: Optional[int] = None, price_out: float = 0.0):
         self.engine = engine
         self.wm = wm
         self.cloud = cloud
-        self.concurrency = concurrency
+        # derived caps track capacity if the engine is later pooled; an
+        # explicit cap is a caller admission policy and must survive it
+        self.derived_concurrency = concurrency is None
+        self.concurrency = engine.capacity if concurrency is None \
+            else concurrency
         self.price_out = price_out
+
+    def saturated(self) -> bool:
+        """True when no replica has a free KV slot (spill eligibility)."""
+        sat = getattr(self.engine, "all_saturated", None)
+        if sat is not None:
+            return bool(sat)
+        return self.engine.load >= self.engine.slots
 
     # ---- async surface (fleet pump loop) -------------------------------
     def submit(self, query, node, dep_results) -> _Inflight:
@@ -436,11 +532,9 @@ class JAXExecutor:
                          query, time.perf_counter())
 
     def pump(self) -> bool:
-        """Advance the engine one step if it has work. Returns progress."""
-        if self.engine.has_work:
-            self.engine.step()
-            return True
-        return False
+        """Advance the engine (or every loaded pool replica) one step if
+        it has work. Returns progress."""
+        return bool(self.engine.pump())
 
     def poll(self, h: _Inflight):
         """Collect a finished future; None while still decoding."""

@@ -1,0 +1,240 @@
+"""Replicated serving-engine pool: sharded cloud capacity with
+replica-aware dispatch.
+
+HybridFlow's cloud side was one ``ServingEngine`` with N slots, so
+"cloud concurrency" was really a single replica's batch width. An
+``EnginePool`` owns R engine replicas — **shared params** (one pytree,
+no re-init) but **independent KV slot pools** — and exposes the same
+``submit`` / ``has_work`` / ``step`` surface as a single engine, so
+``JAXExecutor`` and the fleet scheduler drive either interchangeably.
+
+Dispatch contract
+-----------------
+* **Least-loaded replica selection** — ``submit`` routes each request to
+  the replica with the smallest *load* (active + queued requests); ties
+  break to the lowest replica index. Selection is a pure function of the
+  pool's current occupancy, so a given submit/step sequence is
+  deterministic.
+* **R = 1 identity** — a one-replica pool performs exactly the single
+  engine's admit → prefill → decode sequence per ``step``; greedy tokens
+  are bit-identical to driving the lone ``ServingEngine`` directly
+  (tested through the live ``FleetScheduler``).
+* **Pump pass** — ``pump()``/``step()`` advance *every* replica with
+  pending work in one pass. With ``threads=True`` (default) each loaded
+  replica's step runs on its own worker thread: jitted execution
+  releases the GIL, so replica computes overlap on multi-core hosts the
+  way they would on per-replica accelerators — two half-full replicas
+  cost one step's wall-clock, not two. Replica state is strictly
+  thread-private (each worker touches only its own engine) and finished
+  requests are collected in replica-index order, so token streams and
+  completion order stay deterministic. ``threads=False`` falls back to
+  a sequential launch-all/commit-all pass: all replicas' prefill chunks
+  are dispatched before any is synced, then all decode steps likewise,
+  letting JAX's async dispatch overlap one replica's host-side commit
+  with the next replica's device compute.
+* **Saturation** — ``all_saturated`` is True only when every replica's
+  load has reached its slot count. ``JAXExecutor.saturated()`` forwards
+  it to the fleet scheduler, whose cloud→edge spill fires only then:
+  a pool with any free replica slot keeps cloud-routed work on the
+  cloud.
+* **Occupancy stats** — ``occupancy()`` reports per-replica slot-lease
+  state (active / queued / free / requests / slot_reuses / peak_active);
+  ``stats`` aggregates the replicas' counters into one engine-shaped
+  dict (plus ``replicas`` and ``pump_passes``) for drop-in reporting.
+
+``EnginePool.replicate`` builds R fresh replicas from a config + params;
+``EnginePool.like`` scales out an existing engine, keeping it as replica
+0 (external handles to it stay live) and cloning R-1 siblings with
+distinct sampling seeds.
+"""
+from __future__ import annotations
+
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, List, Optional, Sequence
+
+from repro.serving.engine import Request, ServingEngine
+
+
+class EnginePool:
+    """R serving-engine replicas behind one engine-shaped surface."""
+
+    def __init__(self, engines: Sequence[ServingEngine], *,
+                 threads: bool = True):
+        if not engines:
+            raise ValueError("EnginePool needs at least one replica")
+        self.engines: List[ServingEngine] = list(engines)
+        self.threads = threads
+        self._tp: Optional[ThreadPoolExecutor] = None
+        self.pool_stats: Dict[str, object] = {
+            "pump_passes": 0,
+            "submitted": [0] * len(self.engines),
+        }
+
+    # ---- constructors --------------------------------------------------
+    @classmethod
+    def replicate(cls, cfg, params, *, replicas: int, seed: int = 0,
+                  threads: bool = True, **engine_kw) -> "EnginePool":
+        """R fresh replicas sharing one params pytree. Replica i samples
+        with ``seed + i`` so replica 0 matches a lone engine built with
+        ``seed`` (the R=1 bit-identity guarantee)."""
+        if replicas < 1:
+            raise ValueError("replicas must be >= 1")
+        return cls([ServingEngine(cfg, params, seed=seed + i, **engine_kw)
+                    for i in range(replicas)], threads=threads)
+
+    @classmethod
+    def like(cls, engine: ServingEngine, replicas: int, *,
+             threads: bool = True) -> "EnginePool":
+        """Scale an existing engine out to R replicas: the given engine
+        becomes replica 0 (its queue/slots are preserved), siblings are
+        clones over the same params with distinct sampling seeds."""
+        if replicas < 1:
+            raise ValueError("replicas must be >= 1")
+        return cls([engine] + [engine.clone(seed=engine.seed + i)
+                               for i in range(1, replicas)],
+                   threads=threads)
+
+    # ---- occupancy -----------------------------------------------------
+    @property
+    def n_replicas(self) -> int:
+        return len(self.engines)
+
+    @property
+    def capacity(self) -> int:
+        """Total KV slots across replicas (replicas × slots when uniform)
+        — what ``JAXExecutor`` derives its dispatch concurrency from."""
+        return sum(e.slots for e in self.engines)
+
+    @property
+    def n_active(self) -> int:
+        return sum(e.n_active for e in self.engines)
+
+    @property
+    def load(self) -> int:
+        return sum(e.load for e in self.engines)
+
+    @property
+    def has_work(self) -> bool:
+        return any(e.has_work for e in self.engines)
+
+    @property
+    def all_saturated(self) -> bool:
+        """True when no replica has a free slot left (spill eligibility:
+        cloud→edge spill must not fire while any replica could still
+        admit the request)."""
+        return all(e.load >= e.slots for e in self.engines)
+
+    def occupancy(self) -> List[Dict[str, int]]:
+        """Per-replica slot-lease snapshot."""
+        return [{"replica": i, "slots": e.slots, "active": e.n_active,
+                 "queued": len(e.queue),
+                 "free": max(e.slots - e.load, 0),
+                 "requests": e.stats["requests"],
+                 "slot_reuses": e.stats["slot_reuses"],
+                 "peak_active": e.stats["peak_active"]}
+                for i, e in enumerate(self.engines)]
+
+    # gauges describe one replica's high-water mark, not fleet volume:
+    # summing them would report a concurrency that may never have existed
+    _MAX_STATS = ("peak_active", "prefill_batch_max")
+
+    @property
+    def stats(self) -> Dict[str, object]:
+        """Engine-shaped aggregate of every replica's counters: volumes
+        sum, per-replica gauges take the max (per-replica values are in
+        ``occupancy()``)."""
+        agg: Dict[str, object] = {}
+        for e in self.engines:
+            for k, v in e.stats.items():
+                if not isinstance(v, (int, float)):
+                    if v is not None:
+                        agg[k] = v
+                elif k in self._MAX_STATS:
+                    agg[k] = max(agg.get(k, 0), v)
+                else:
+                    agg[k] = agg.get(k, 0) + v
+        agg.setdefault("prefill_backend", None)
+        agg["replicas"] = self.n_replicas
+        agg["pump_passes"] = self.pool_stats["pump_passes"]
+        return agg
+
+    # ---- engine surface ------------------------------------------------
+    def submit(self, prompt, **kw) -> Request:
+        """Enqueue on the least-loaded replica (ties → lowest index)."""
+        i = min(range(len(self.engines)),
+                key=lambda j: (self.engines[j].load, j))
+        self.pool_stats["submitted"][i] += 1
+        return self.engines[i].submit(prompt, **kw)
+
+    def step(self) -> List[Request]:
+        """One pool pass: step every replica with pending work (see the
+        module docstring for the threaded vs launch-all/commit-all pass
+        shapes); for a single loaded replica this is exactly
+        ``ServingEngine.step``."""
+        loaded = [e for e in self.engines if e.has_work]
+        if not loaded:
+            return []
+        self.pool_stats["pump_passes"] += 1
+        if len(loaded) == 1:
+            return loaded[0].step()
+        if self.threads:
+            if self._tp is None:
+                self._tp = ThreadPoolExecutor(
+                    max_workers=len(self.engines),
+                    thread_name_prefix="enginepool")
+            # one worker per loaded replica: replica state is thread-
+            # private, results join in replica-index order (determinism)
+            futs = [self._tp.submit(e.step) for e in loaded]
+            finished: List[Request] = []
+            for f in futs:
+                finished.extend(f.result())
+            return finished
+        for e in loaded:
+            e._admit()
+        prefills = [(e, e._prefill_launch()) for e in loaded]
+        for e, p in prefills:
+            if p is not None:
+                e._prefill_commit(p)
+        decodes = [(e, e._decode_launch()) for e in loaded]
+        finished = []
+        for e, d in decodes:
+            if d is not None:
+                finished.extend(e._decode_commit(d))
+        return finished
+
+    def pump(self) -> bool:
+        """Advance every replica with pending work one step, in one
+        pass. Returns whether anything progressed."""
+        if not self.has_work:
+            return False
+        self.step()
+        return True
+
+    def run_until_done(self, max_steps: int = 10_000) -> List[Request]:
+        done: List[Request] = []
+        for _ in range(max_steps):
+            if not self.has_work:
+                break
+            done.extend(self.step())
+        return done
+
+    def run_until(self, req: Request, max_steps: int = 10_000) -> Request:
+        """Step the pool until ``req`` finishes; co-resident requests on
+        every replica keep advancing on the same passes."""
+        owner = getattr(req, "_engine", None)
+        if not any(owner is e for e in self.engines):
+            raise ValueError(
+                f"request {req.rid} was never submitted to this pool "
+                f"(submit() returns the Request object to wait on)")
+        for _ in range(max_steps):
+            if req.done:
+                return req
+            if not owner.has_work:
+                raise RuntimeError(
+                    f"replica drained with request {req.rid} unfinished "
+                    f"(engine bug: an owned request left the queue)")
+            self.step()
+        if req.done:
+            return req
+        raise RuntimeError(f"request {req.rid} did not finish "
+                           f"within {max_steps} pool passes")

@@ -35,7 +35,11 @@ different queries decode in the same micro-batches — wall-clock then
 tracks the simulated makespan instead of serializing subtask-by-subtask.
 ``pump=False`` forces the pre-pump synchronous dispatch (the perf
 baseline in ``benchmarks/serve_throughput.py``); latency is measured
-wall-clock from actual batched decode steps either way.
+wall-clock from actual batched decode steps either way. ``replicas=R``
+shards an engine-backed cloud executor across an R-replica
+``EnginePool`` (shared params, independent KV slot pools, least-loaded
+dispatch): cloud concurrency then derives from pool capacity and the
+report's stats carry per-replica occupancy.
 """
 from __future__ import annotations
 
@@ -128,9 +132,10 @@ class ServingRuntime:
                  global_k_max: Optional[float] = None,
                  global_l_max: Optional[float] = None,
                  spill_to_edge: bool = False,
-                 pump: Optional[bool] = None):
+                 pump: Optional[bool] = None,
+                 replicas: Optional[int] = None):
         self.edge = edge
-        self.cloud = cloud
+        self.cloud = self._pooled_cloud(cloud, replicas)
         self.policy = policy
         self.planner = planner
         self.max_inflight = max_inflight
@@ -141,6 +146,54 @@ class ServingRuntime:
         self.global_budget: Optional[TwoBudgetThreshold] = None
         self._pending: List[Tuple[Query, PlanDAG, str,
                                   Optional[Schedule]]] = []
+
+    @staticmethod
+    def _pooled_cloud(cloud: Executor, replicas: Optional[int]) -> Executor:
+        """Thread ``replicas=`` through to the cloud side: scale an
+        engine-backed cloud executor out to an R-replica ``EnginePool``
+        (shared params, independent KV slot pools). Dispatch concurrency
+        then derives from pool capacity (replicas × slots) — unless the
+        caller set an explicit cap on the executor, which is an admission
+        policy and survives pooling unchanged — and cloud→edge spill
+        fires only when every replica is saturated. ``None`` leaves the
+        executor untouched (including pre-built pools)."""
+        if replicas is None:
+            return cloud
+        if replicas < 1:
+            raise ValueError("replicas must be >= 1 (or None)")
+        eng = getattr(cloud, "engine", None)
+        if eng is None:
+            raise ValueError(
+                "replicas= needs an engine-backed cloud executor "
+                "(JAXExecutor); analytic executors model cloud width "
+                "through their concurrency directly")
+        from repro.serving.engine import JAXExecutor
+        from repro.serving.pool import EnginePool
+        if isinstance(eng, EnginePool):
+            if eng.n_replicas != replicas:
+                raise ValueError(
+                    f"cloud executor already holds a {eng.n_replicas}-"
+                    f"replica pool; cannot rescale to replicas={replicas}")
+            return cloud
+        pool = EnginePool.like(eng, replicas)
+        keep_cap = None if getattr(cloud, "derived_concurrency", True) \
+            else cloud.concurrency
+        return JAXExecutor(pool, cloud.wm, cloud=True,
+                           concurrency=keep_cap,
+                           price_out=cloud.price_out)
+
+    def _pool_occupancy(self, stats: Dict) -> Dict:
+        """Attach per-replica slot-lease stats for engine-backed pools."""
+        for name, ex in (("edge", self.edge), ("cloud", self.cloud)):
+            eng = getattr(ex, "engine", None)
+            occ = getattr(eng, "occupancy", None)
+            if occ is None:
+                continue
+            stats[f"{name}_replicas"] = eng.n_replicas
+            stats[f"{name}_replica_requests"] = [o["requests"]
+                                                 for o in occ()]
+            stats[f"{name}_pump_passes"] = eng.pool_stats["pump_passes"]
+        return stats
 
     # ---- admission ----------------------------------------------------
     def submit(self, query: Query, dag: Optional[PlanDAG] = None, *,
@@ -174,7 +227,7 @@ class ServingRuntime:
         results = fleet.run()
         wall = time.perf_counter() - t0
         return RuntimeReport(results, fleet.makespan, wall,
-                             stats=dict(fleet.stats))
+                             stats=self._pool_occupancy(dict(fleet.stats)))
 
     def serve_sequential(self, queries: Sequence[Query] = ()) -> RuntimeReport:
         """One-query-at-a-time baseline (the seed's serving shape): each
@@ -200,4 +253,5 @@ class ServingRuntime:
                 stats[k] = stats.get(k, 0) + v
         wall = time.perf_counter() - t0
         stats["peak_inflight"] = 1 if batch else 0
-        return RuntimeReport(results, makespan, wall, stats=stats)
+        return RuntimeReport(results, makespan, wall,
+                             stats=self._pool_occupancy(stats))

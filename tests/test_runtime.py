@@ -1,13 +1,16 @@
 """Multi-query serving runtime: concurrent==sequential result equivalence,
-global-budget exhaustion without deadlock, fair admission, KV-slot reuse."""
+global-budget exhaustion without deadlock, fair admission, KV-slot reuse,
+order-stable same-tick completion observations."""
 import numpy as np
 import pytest
 
+from repro.core.dag import Node, PlanDAG
 from repro.core.dual import TwoBudgetThreshold
 from repro.core.hybridflow import (HybridFlowPolicy, Pipeline, RandomPolicy,
                                    StaticPolicy)
-from repro.core.scheduler import FleetScheduler, WorldModelExecutor, run_query
-from repro.data.tasks import WorldModel, gen_benchmark
+from repro.core.scheduler import (FleetScheduler, SubtaskResult,
+                                  WorldModelExecutor, run_query)
+from repro.data.tasks import Query, Subtask, WorldModel, gen_benchmark
 
 
 def _planned(pipe, n=12, bench="gpqa"):
@@ -191,6 +194,80 @@ def test_empty_batch_and_zero_budget():
     assert rep.api_cost == 0.0
     assert rep.stats["forced_edge"] == sum(len(r.results)
                                            for r in rep.results)
+
+
+class _InstantAsyncExecutor:
+    """Async-surface executor that finishes every in-flight future on the
+    next pump tick — many subtasks complete on the SAME tick, the exact
+    condition under which observation order used to follow dispatch
+    interleaving instead of a stable key."""
+
+    def __init__(self, cloud, concurrency=64):
+        self.cloud = cloud
+        self.concurrency = concurrency
+        self._open = []
+
+    def submit(self, query, node, dep_results):
+        h = {"node": node, "done": False}
+        self._open.append(h)
+        return h
+
+    def pump(self):
+        if not self._open:
+            return False
+        for h in self._open:
+            h["done"] = True
+        self._open.clear()
+        return True
+
+    def poll(self, h):
+        if not h["done"]:
+            return None
+        return SubtaskResult(h["node"].sid, int(self.cloud), True, 0.01,
+                             0.0, 10, 10, answer="x")
+
+
+class _RecordingPolicy:
+    def __init__(self):
+        self.observed = []
+
+    def decide(self, query, node, ctx):
+        return 1, {}
+
+    def observe(self, query, node, r, result, ctx):
+        self.observed.append((query.qid, node.sid))
+
+
+def _flat_query(qid, n=3):
+    """n independent subtasks (no deps): all ready — and dispatched round-
+    robin across queries — at t0."""
+    sts = tuple(Subtask(i, f"{qid} part {i}", "ANALYZE", (), 0.5, 40, 60)
+                for i in range(n))
+    dag = PlanDAG(tuple(Node(s.sid, s.desc, s.role, s.deps) for s in sts))
+    return Query(qid, "gpqa", f"flat query {qid}", sts), dag
+
+
+def test_pumped_same_tick_completions_observed_in_sorted_order():
+    """ROADMAP 'fleet-level policy state': a policy shared across the
+    fleet (e.g. the HybridFlowPolicy LinUCB calibrator) must see
+    same-tick completions in (qid, sid) order, not in engine-poll order
+    — dispatch interleaves queries round-robin, so poll order would be
+    timing- and replica-dependent."""
+    pol = _RecordingPolicy()
+    fleet = FleetScheduler(_InstantAsyncExecutor(False),
+                           _InstantAsyncExecutor(True))
+    # submit order deliberately unsorted by qid
+    planned = [_flat_query(qid) for qid in ("q-c", "q-a", "q-b")]
+    for q, dag in planned:
+        fleet.submit(q, dag, pol)
+    results = fleet.run()
+    assert len(results) == 3
+    assert fleet.stats["dispatched"] == 9
+    # every subtask completed on one pump tick: the round-robin dispatch
+    # order was (q-c 0, q-a 0, q-b 0, q-c 1, ...); observations must come
+    # back fully sorted regardless
+    assert len(pol.observed) == 9
+    assert pol.observed == sorted(pol.observed)
 
 
 def test_fleet_pump_overlaps_real_engines(model_zoo):
