@@ -1,21 +1,29 @@
 """Cross-PR serve-bench regression check.
 
 Diffs a freshly produced ``BENCH_serve.json`` against the committed
-``benchmarks/baseline_serve.json`` and exits non-zero when any comparable
+``benchmarks/baseline_serve.json`` and exits non-zero when any gating
 mode regresses beyond tolerance — qps for the scheduler/runtime rows,
-``prefill_tok_per_s`` for the prefill-microbench rows.
+``prefill_tok_per_s`` / ``decode_tok_per_s`` for the kernel-microbench
+rows.
 
-Rows come in two classes, selectable with ``--only``:
+Rows come in three classes; ``--only`` selects analytic vs everything
+measured on a wall clock:
 
 * **analytic** — simulated-clock scheduler/runtime rows (``sequential``,
   ``concurrent-*``). Deterministic up to scheduler tie-breaks, so their
   qps diff GATES CI (a drop beyond ``--tolerance``, default 20%, fails
   the job on any machine).
-* **wallclock** — ``real-*`` and ``prefill-*`` rows measured on whatever
-  machine ran them. CI checks these with ``continue-on-error: true``
-  (shared runners are noisy) and the looser ``--real-tolerance``
-  (default 60%): a regression fails loudly in the log/annotations
-  without gating the PR.
+* **microbench** — ``prefill-*`` / ``decode-*`` kernel rows. Single-op
+  timings are far less noisy than full fleet runs, so these GATE too,
+  at the looser ``--real-tolerance`` (default 60%). On top of the
+  baseline diff, the current run itself must show the Pallas prefill
+  kernel no slower than its jnp reference row (``prefill-pallas``
+  ms_per_call <= ``prefill-ref``) — the regression this gate exists to
+  catch; the decode pair prints a warning when the kernel loses.
+* **real** — ``real-*`` fleet rows measured on whatever shared runner
+  ran them. Too noisy to gate: a regression prints a WARNING in the log
+  without failing the job, so the step no longer needs
+  ``continue-on-error``.
 
 ``PYTHONPATH=src python -m benchmarks.check_bench [--current PATH]
 [--baseline PATH] [--only analytic|wallclock] [--tolerance 0.2]
@@ -41,15 +49,35 @@ def _load(path):
 
 def _metric(row):
     """(name, value) of the row's throughput metric, or (None, None)."""
-    for name in ("qps", "prefill_tok_per_s"):
+    for name in ("qps", "prefill_tok_per_s", "decode_tok_per_s"):
         v = row.get(name)
         if isinstance(v, (int, float)) and v > 0:
             return name, float(v)
     return None, None
 
 
+def _row_class(mode: str) -> str:
+    if mode.startswith(("prefill-", "decode-")):
+        return "microbench"
+    if mode.startswith("real-"):
+        return "real"
+    return "analytic"
+
+
 def _is_wallclock(mode: str) -> bool:
-    return mode.startswith(("real-", "prefill-"))
+    return _row_class(mode) != "analytic"
+
+
+def _kernel_vs_ref(cur, pallas_mode, ref_mode):
+    """(pallas_ms, ref_ms) from the current run, or None if either row
+    (or its ms_per_call) is absent."""
+    p, r = cur.get(pallas_mode), cur.get(ref_mode)
+    if not p or not r:
+        return None
+    pm, rm = p.get("ms_per_call"), r.get("ms_per_call")
+    if not isinstance(pm, (int, float)) or not isinstance(rm, (int, float)):
+        return None
+    return float(pm), float(rm)
 
 
 def check(current: str, baseline: str, tolerance: float,
@@ -63,19 +91,21 @@ def check(current: str, baseline: str, tolerance: float,
         return 1
     cur = _load(current)
     base = _load(baseline)
+    selected = cur
     if only is not None:
-        want = (lambda m: _is_wallclock(m)) if only == "wallclock" \
+        want = _is_wallclock if only == "wallclock" \
             else (lambda m: not _is_wallclock(m))
         base = {m: r for m, r in base.items() if want(m)}
-        cur = {m: r for m, r in cur.items() if want(m)}
+        selected = {m: r for m, r in cur.items() if want(m)}
 
     regressions = []
+    warnings = []
     compared = 0
     print(f"{'mode':<24} {'metric':<18} {'baseline':>12} {'current':>12} "
           f"{'delta':>8}")
     for mode, brow in sorted(base.items()):
         name, bval = _metric(brow)
-        crow = cur.get(mode)
+        crow = selected.get(mode)
         if name is None or crow is None:
             continue
         cval = crow.get(name)
@@ -83,16 +113,42 @@ def check(current: str, baseline: str, tolerance: float,
             continue
         compared += 1
         delta = (cval - bval) / bval
-        tol = real_tolerance if _is_wallclock(mode) else tolerance
-        flag = " <-- REGRESSION" if delta < -tol else ""
+        cls = _row_class(mode)
+        tol = tolerance if cls == "analytic" else real_tolerance
+        bad = delta < -tol
+        flag = ""
+        if bad and cls == "real":
+            flag = " <-- WARNING (non-gating real-engine row)"
+            warnings.append((mode, name, bval, cval, delta))
+        elif bad:
+            flag = " <-- REGRESSION"
+            regressions.append((mode, name, bval, cval, delta))
         print(f"{mode:<24} {name:<18} {bval:>12.3f} {cval:>12.3f} "
               f"{delta:>7.1%}{flag}")
-        if flag:
-            regressions.append((mode, name, bval, cval, delta))
+
+    # cross-row gate inside the CURRENT run: the Pallas prefill kernel
+    # must not lose to the jnp reference it replaces (this is the exact
+    # regression shape the microbench class exists to catch)
+    if only != "analytic":
+        pf = _kernel_vs_ref(selected, "prefill-pallas", "prefill-ref")
+        if pf is not None:
+            pm, rm = pf
+            verdict = "OK" if pm <= rm else "FAIL"
+            print(f"\nprefill kernel vs ref: pallas {pm:.3f} ms/call, "
+                  f"ref {rm:.3f} ms/call ({verdict})")
+            if pm > rm:
+                regressions.append(("prefill-pallas>ref", "ms_per_call",
+                                    rm, pm, (pm - rm) / rm))
+        dec = _kernel_vs_ref(selected, "decode-pallas", "decode-ref")
+        if dec is not None and dec[0] > dec[1]:
+            print(f"WARNING: decode-pallas {dec[0]:.3f} ms/call slower "
+                  f"than decode-ref {dec[1]:.3f} ms/call")
+            warnings.append(("decode-pallas>ref", "ms_per_call",
+                             dec[1], dec[0], (dec[0] - dec[1]) / dec[1]))
 
     # a gate that compares nothing gates nothing: renamed/dropped modes
     # must fail loudly instead of silently passing the check
-    missing = sorted(set(base) - set(cur))
+    missing = sorted(set(base) - set(selected))
     if base and compared == 0:
         print(f"\nFAIL: baseline has {len(base)} mode(s) but none were "
               f"comparable in the current run (renamed modes?)")
@@ -103,12 +159,14 @@ def check(current: str, baseline: str, tolerance: float,
                   f"current run: {missing}")
             return 1
         print(f"note: modes in baseline but not in current run: {missing}")
+    if warnings:
+        print(f"\nnote: {len(warnings)} non-gating warning(s) above")
     if regressions:
-        print(f"\nFAIL: {len(regressions)} mode(s) regressed beyond "
-              f"tolerance (analytic {tolerance:.0%} / wall-clock "
-              f"{real_tolerance:.0%})")
+        print(f"\nFAIL: {len(regressions)} gating check(s) failed "
+              f"(analytic tol {tolerance:.0%} / microbench tol "
+              f"{real_tolerance:.0%} / kernel-vs-ref)")
         return 1
-    print("\nOK: no serve-bench regression beyond tolerance")
+    print("\nOK: no gating serve-bench regression")
     return 0
 
 
@@ -121,11 +179,13 @@ def main():
                     help="allowed fractional drop for analytic rows")
     ap.add_argument("--real-tolerance", type=float, default=0.6,
                     help="allowed fractional drop for wall-clock rows "
-                         "(real-* engine modes, prefill-* microbench)")
+                         "(gating prefill-*/decode-* microbench rows; "
+                         "real-* engine rows only warn)")
     ap.add_argument("--only", choices=["analytic", "wallclock"],
                     default=None,
-                    help="restrict the diff to one row class (CI gates "
-                         "analytic, warns on wallclock)")
+                    help="restrict the diff to one row class (CI runs "
+                         "analytic and wallclock as separate steps; "
+                         "wallclock = microbench gates + real-* warnings)")
     args = ap.parse_args()
     sys.exit(check(args.current, args.baseline, args.tolerance,
                    args.real_tolerance, args.only))

@@ -9,6 +9,15 @@ FLOPs/bytes/collectives use the depth-extrapolated values (XLA counts scan
 bodies once — see dryrun._depth_variants); post-SPMD HLO shapes are
 per-chip, so no further division by chip count is needed. MODEL_FLOPS
 ratio flags recompute/redundancy waste.
+
+A second section reports achieved-vs-peak for the two serving Pallas
+kernels (ragged chunked-prefill attention, batched decode attention):
+analytic FLOPs/bytes for the microbench shapes divided by the measured
+ms_per_call from ``BENCH_serve.json`` (or a fresh microbench run when
+the file is absent), against the v5e peak FLOP/s and HBM bandwidth. On
+the CPU CI runner the kernels run in interpret mode so the fractions
+are tiny — the section tracks the trajectory and becomes a real
+utilization number on TPU.
 """
 from __future__ import annotations
 
@@ -99,9 +108,80 @@ def run(dryrun_dir: str = DRYRUN_DIR):
     return header, rows
 
 
+def _kernel_cost(row: Dict) -> Optional[Dict]:
+    """Analytic (flops, bytes) for one serving-kernel microbench row.
+
+    Dense upper bound: raggedness (per-row take/kv_len) and masked-block
+    skips only reduce the real work, so achieved-vs-peak from these
+    counts is conservative. f32 operands (the microbench dtype).
+    """
+    H, hd = row.get("heads"), row.get("head_dim")
+    KV = row.get("kv_heads")
+    if not all(isinstance(x, (int, float)) for x in (H, hd, KV)):
+        return None
+    if row["mode"].startswith("prefill-"):
+        G, S, W = row["G"], row["S"], row["kv_width"]
+        flops = 4 * G * H * S * W * hd            # qk + pv matmuls
+        byts = 4 * (2 * G * S * H * hd + 2 * G * W * KV * hd)
+    elif row["mode"].startswith("decode-"):
+        B, M = row["B"], row["cache_len"]
+        flops = 4 * B * H * M * hd
+        byts = 4 * (2 * B * H * hd + 2 * B * M * KV * hd)
+    else:
+        return None
+    return {"flops": flops, "bytes": byts}
+
+
+def kernel_rows(serve_json: Optional[str] = None):
+    """Achieved-vs-peak rows for the Pallas serving kernels."""
+    rows = []
+    micro = []
+    if serve_json and os.path.exists(serve_json):
+        with open(serve_json) as f:
+            micro = [r for r in json.load(f)
+                     if isinstance(r, dict)
+                     and r.get("mode", "").endswith("-pallas")]
+    if not micro:
+        from benchmarks.serve_throughput import (run_decode_microbench,
+                                                 run_prefill_microbench)
+        micro = [r for r in run_prefill_microbench() +
+                 run_decode_microbench() if r["mode"].endswith("-pallas")]
+    for r in micro:
+        cost = _kernel_cost(r)
+        ms = r.get("ms_per_call")
+        if cost is None or not isinstance(ms, (int, float)) or ms <= 0:
+            continue
+        t = ms / 1e3
+        af, ab = cost["flops"] / t, cost["bytes"] / t
+        t_c = cost["flops"] / PEAK_FLOPS_BF16
+        t_m = cost["bytes"] / HBM_BW
+        bound = "memory" if t_m >= t_c else "compute"
+        rows.append([r["mode"], ms, af / 1e12, ab / 2**30,
+                     af / PEAK_FLOPS_BF16, ab / HBM_BW, bound])
+    header = ["kernel", "ms_per_call", "achieved_tflops", "achieved_gibps",
+              "pct_peak_flops", "pct_peak_hbm", "roofline_bound"]
+    return header, rows
+
+
 def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--serve-json", default="BENCH_serve.json",
+                    help="microbench timings source for the kernel "
+                         "section (re-times the kernels when absent)")
+    ap.add_argument("--no-kernels", action="store_true",
+                    help="skip the serving-kernel achieved-vs-peak "
+                         "section (it imports jax)")
+    args = ap.parse_args()
     header, rows = run()
     C.print_csv("roofline", header, rows)
+    if not args.no_kernels:
+        kheader, krows = kernel_rows(args.serve_json)
+        if krows:
+            C.print_csv("roofline_kernels", kheader, krows)
+        else:
+            print("roofline_kernels: no Pallas microbench rows found")
 
 
 if __name__ == "__main__":

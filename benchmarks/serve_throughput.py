@@ -28,13 +28,17 @@ single engine on concurrent fleet wall-clock: extra replica slots drain
 the cloud backlog sooner and each pass overlaps one replica's host
 bookkeeping with another's device compute.
 
-A final section microbenches the ragged chunked-prefill attention op
-itself — jnp reference twin vs the Pallas kernel (``prefill-ref`` /
-``prefill-pallas`` rows). Results are also written as machine-readable
-``BENCH_serve.json`` rows ``{mode, qps, p50, p99, prefill_tokens,
-peak_active, ...}`` for the cross-PR perf trajectory (diffed against
-``benchmarks/baseline_serve.json`` by ``benchmarks/check_bench.py`` in
-CI — the analytic rows gate, the wall-clock rows warn).
+Two final sections microbench the serving attention ops themselves —
+jnp reference vs Pallas kernel for ragged chunked prefill
+(``prefill-ref`` / ``prefill-pallas`` rows) and for batched decode
+(``decode-ref`` / ``decode-pallas`` rows). Results are also written as
+machine-readable ``BENCH_serve.json`` rows ``{mode, qps, p50, p99,
+prefill_tokens, peak_active, ...}`` for the cross-PR perf trajectory
+(diffed against ``benchmarks/baseline_serve.json`` by
+``benchmarks/check_bench.py`` in CI — the analytic and kernel-microbench
+rows gate, the noisy real-engine wall-clock rows warn; the microbench
+check also requires the Pallas row to beat its jnp reference row in the
+same run).
 
 ``PYTHONPATH=src python -m benchmarks.serve_throughput [--queries N]
 [--real-queries M] [--pool-queries K] [--json PATH]``
@@ -299,6 +303,52 @@ def run_prefill_microbench(*, G=4, S=64, W=256, H=4, KV=2, hd=64, iters=3):
     return rows
 
 
+def run_decode_microbench(*, B=8, M=256, H=4, KV=2, hd=64, iters=10):
+    """Ref-vs-kernel batched decode-attention microbench.
+
+    Times the exact op ``_dispatch_attention`` routes per decode tick —
+    the jnp reference (``decode_attention_ref``) vs the batched Pallas
+    decode kernel (one (B, M/bk) launch for all slots) — on an
+    engine-shaped workload (B slots, ragged per-slot ``kv_len`` over an
+    M-line cache). Same caveat as the prefill microbench: interpret mode
+    on CPU, a real speed comparison on TPU.
+    """
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import ops, ref
+
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    q = jax.random.normal(ks[0], (B, 1, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, M, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, M, KV, hd), jnp.float32)
+    kv_len = jax.random.randint(ks[3], (B,), 1, M + 1).astype(jnp.int32)
+
+    ref_fn = jax.jit(lambda q, k, v, n: ref.decode_attention_ref(q, k, v, n))
+    ker_fn = jax.jit(lambda q, k, v, n: ops.decode_attention(
+        q, k, v, kv_len=n))
+
+    def timed(fn):
+        fn(q, k, v, kv_len).block_until_ready()          # warm-up/compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(q, k, v, kv_len)
+        out.block_until_ready()
+        return (time.perf_counter() - t0) / iters
+
+    rows = []
+    for mode, fn in (("decode-ref", ref_fn), ("decode-pallas", ker_fn)):
+        dt = timed(fn)
+        rows.append({"mode": mode, "B": B, "cache_len": M,
+                     "heads": H, "kv_heads": KV, "head_dim": hd,
+                     "ms_per_call": dt * 1e3,
+                     "decode_tok_per_s": B / dt if dt > 0 else 0.0})
+    return rows
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--queries", type=int, default=None,
@@ -316,6 +366,9 @@ def main():
                     help="machine-readable output path ('' disables)")
     ap.add_argument("--prefill-iters", type=int, default=3,
                     help="ref-vs-kernel prefill microbench iterations "
+                         "(0 disables)")
+    ap.add_argument("--decode-iters", type=int, default=10,
+                    help="ref-vs-kernel decode microbench iterations "
                          "(0 disables)")
     args = ap.parse_args()
 
@@ -363,6 +416,13 @@ def main():
                     list(pf_rows[0].keys()),
                     [list(r.values()) for r in pf_rows])
         json_rows += pf_rows
+
+    if args.decode_iters > 0:
+        dec_rows = run_decode_microbench(iters=args.decode_iters)
+        C.print_csv("serve_decode_microbench",
+                    list(dec_rows[0].keys()),
+                    [list(r.values()) for r in dec_rows])
+        json_rows += dec_rows
 
     if args.json:
         with open(args.json, "w") as f:

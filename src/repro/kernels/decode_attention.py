@@ -1,13 +1,22 @@
-"""Decode attention Pallas TPU kernel (flash-decode over a long KV cache).
+"""Per-head decode-attention Pallas TPU kernel (flash-decode over a long
+KV cache).
 
 One query token per request attends over a [B, M, KV, hd] cache with a
 per-request valid length. Grid (B, H, M/BK): KV blocks stream through
 VMEM sequentially with online-softmax scratch, so the VMEM working set is
-O(BK·hd) regardless of context length — this is the serving hot spot for
-decode_32k / long_500k.
+O(BK·hd) regardless of context length.
+
+This is the original per-head kernel, kept as the simple reference shape
+for roofline comparisons; the serving engine dispatches the batched
+sibling (``batched_decode_attention``) which covers the whole GQA head
+stack of every slot in a (B, M/BK) grid — B*H fewer grid steps per
+decode tick.
 
 The q row (1 x hd) is padded to an 8-row sublane tile; masking keeps the
-math exact. kv_len rides in SMEM via PrefetchScalarGridSpec.
+math exact. kv_len rides in SMEM via PrefetchScalarGridSpec. ``bk`` is
+clamped to the cache width M (and non-multiple tails are padded and
+masked), so a small-cache config neither fails to tile nor over-reads —
+the default bk=512 is a cap, not a requirement.
 """
 from __future__ import annotations
 

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import dispatch
 from repro.kernels.flash_attention import flash_attention_bhsd
-from repro.kernels.decode_attention import decode_attention_bhmd
+from repro.kernels.batched_decode_attention import batched_decode_attention_bhmd
 from repro.kernels.ragged_prefill_attention import ragged_prefill_attention_bhsd
 from repro.kernels.rmsnorm import rmsnorm_2d
 
@@ -37,13 +37,15 @@ def flash_attention(q, k, v, *, causal: bool = True,
 @partial(jax.jit, static_argnames=("window", "bq", "bk"))
 def ragged_prefill_attention(q, k, v, pos0, take, *,
                              window: Optional[int] = None,
-                             bq: int = 128, bk: int = 128):
+                             bq: int = 128, bk: int = 256):
     """q [G,S,H,hd]; k/v [G,W,KV,hd]; pos0/take [G] -> [G,S,H,hd].
 
     Batched ragged chunked-prefill attention: row ``g`` holds ``take[g]``
     valid query tokens at absolute offset ``pos0[g]`` into its W pooled
     KV lines (W is the engine's static ``kv_width`` bucket). Padding
-    query rows (>= take) come back as zeros.
+    query rows (>= take) come back as zeros. Defaults are the tuned
+    serving blocks (bq = one engine chunk, bk = half a max-width cache
+    walk — see the kernel module docstring for the rationale).
     """
     qt = jnp.swapaxes(q, 1, 2)
     kt = jnp.swapaxes(k, 1, 2)
@@ -56,17 +58,22 @@ def ragged_prefill_attention(q, k, v, pos0, take, *,
 
 @partial(jax.jit, static_argnames=("window", "bk"))
 def decode_attention(q, k, v, *, kv_len, window: Optional[int] = None,
-                     bk: int = 512):
+                     bk: int = 256):
     """q [B,1,H,hd]; k/v [B,M,KV,hd]; kv_len [B] -> [B,1,H,hd].
 
-    Rolling-window caches already bound M to the window; kv_len masks the
-    not-yet-filled slots, so no extra window logic is needed here.
+    One launch covers every slot: the batched decode kernel grids
+    (B, M/bk) with the whole GQA head stack folded into each block and
+    per-slot ``kv_len`` in SMEM. Rolling-window caches already bound M
+    to the window and the engine passes ``window=None``; an explicit
+    ``window`` applies the sliding mask over a full cache
+    (``kv_len - window <= kpos < kv_len``).
     """
-    qt = q[:, 0].swapaxes(0, 0)                      # [B,H,hd]
+    qt = q[:, 0]                                     # [B,H,hd]
     kt = jnp.swapaxes(k, 1, 2)                       # [B,KV,M,hd]
     vt = jnp.swapaxes(v, 1, 2)
-    o = decode_attention_bhmd(qt, kt, vt, kv_len, bk=bk,
-                              interpret=dispatch.interpret_mode())
+    o = batched_decode_attention_bhmd(qt, kt, vt, kv_len, window=window,
+                                      bk=bk,
+                                      interpret=dispatch.interpret_mode())
     return o[:, None]
 
 

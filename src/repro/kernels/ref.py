@@ -20,10 +20,19 @@ def ragged_prefill_attention_ref(q, k, v, pos0, take, *,
                                     window=window)
 
 
-def decode_attention_ref(q, k, v, kv_len):
-    """q [B,1,H,hd]; k/v [B,M,KV,hd]; kv_len [B] -> [B,1,H,hd]."""
+def decode_attention_ref(q, k, v, kv_len, *, window: Optional[int] = None):
+    """q [B,1,H,hd]; k/v [B,M,KV,hd]; kv_len [B] -> [B,1,H,hd].
+
+    With ``window`` the query sits at absolute position ``kv_len - 1`` of
+    a full (non-rolling) cache, so valid keys are
+    ``kv_len - window <= kpos < kv_len`` — the per-row ``q_offset`` form
+    of ``layers.attention`` expresses exactly that mask.
+    """
     from repro.models.layers import attention
-    return attention(q, k, v, causal=False, kv_len=kv_len)
+    if window is None:
+        return attention(q, k, v, causal=False, kv_len=kv_len)
+    return attention(q, k, v, causal=False, window=window,
+                     q_offset=kv_len - 1, kv_len=kv_len)
 
 
 def rmsnorm_ref(x, scale, *, eps: float = 1e-5):

@@ -107,8 +107,11 @@ def decoder_layer_decode(p, cfg, h, ck, cv, pos, *, window=None):
                              KV.expand_kv_for_cache(cfg, v).astype(cv.dtype),
                              pos, window)
     kvl = KV.valid_len(pos, ck.shape[1], window)
-    out = L.attention(q, ck.astype(q.dtype), cv.astype(q.dtype),
-                      causal=False, kv_len=kvl)
+    # window=None here on purpose: rolling caches bound M to the window
+    # and kv_len tracks validity. Under use_pallas() this is the batched
+    # decode kernel — all slots/heads in one launch.
+    out = L._dispatch_attention(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                                causal=False, window=None, kv_len=kvl)
     b = h.shape[0]
     h = h + L.dense(p["attn"]["wo"], out.reshape(b, 1, cfg.q_dim))
     hn = L.rms_norm(p["ln2"], h, cfg.norm_eps)
@@ -417,8 +420,9 @@ def encdec_decode(p, cfg, token, pos, cache):
         nck, ncv = KV.write_decode(ck, cv, k.astype(ck.dtype), v.astype(cv.dtype),
                                    pos, None)
         kvl = KV.valid_len(pos, nck.shape[1], None)
-        out = L.attention(q, nck.astype(q.dtype), ncv.astype(q.dtype),
-                          causal=False, kv_len=kvl)
+        out = L._dispatch_attention(q, nck.astype(q.dtype),
+                                    ncv.astype(q.dtype), causal=False,
+                                    window=None, kv_len=kvl)
         b = h.shape[0]
         h = h + L.dense(p_l["self_attn"]["wo"], out.reshape(b, 1, cfg.q_dim))
         # cross-attn against cached encoder k/v
@@ -494,8 +498,8 @@ def _shared_attn_block(p, cfg, h, *, mode, cache=None, pos=None):
         ck, cv = KV.write_decode(cache["k"], cache["v"], k.astype(cache["k"].dtype),
                                  v.astype(cache["v"].dtype), pos, window)
         kvl = KV.valid_len(pos, ck.shape[1], window)
-        out = L.attention(q, ck.astype(q.dtype), cv.astype(q.dtype),
-                          causal=False, kv_len=kvl)
+        out = L._dispatch_attention(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                                    causal=False, window=None, kv_len=kvl)
         b = h.shape[0]
         h = h + L.dense(p["attn"]["wo"], out.reshape(b, 1, cfg.q_dim))
         new_cache = {"k": ck, "v": cv}

@@ -110,11 +110,21 @@ class _DecodePass:
 
 
 def _device_sample(logits, key, temps):
-    """Greedy/temperature sampling for all slots on device. logits [B,V]."""
+    """Greedy/temperature sampling for all slots on device. logits [B,V].
+
+    Greedy rows (``temperature == 0.0``, the default) still flow through
+    the categorical branch before the ``where``-select, so the divisor
+    must stay safe for them: ``where(temps > 0, temps, 1.0)`` keeps the
+    scaled logits finite (a tiny-epsilon denominator amplifies the
+    padded-vocab -1e9 logits toward the float32 edge and trips
+    ``jax_debug_nans`` runs; dividing by exact 0 would be inf/NaN every
+    step). The sampled value of a greedy row is discarded by the select.
+    """
     logits = logits.astype(jnp.float32)
     greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     keys = jax.random.split(key, logits.shape[0])
-    scaled = logits / jnp.maximum(temps, 1e-6)[:, None]
+    safe_t = jnp.where(temps > 0, temps, 1.0)
+    scaled = logits / safe_t[:, None]
     sampled = jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
     return jnp.where(temps > 0, sampled, greedy)
 
@@ -194,13 +204,26 @@ class ServingEngine:
         self.stats = {"tokens_out": 0, "prefill_tokens": 0, "steps": 0,
                       "slot_reuses": 0, "peak_active": 0, "requests": 0,
                       "prefill_calls": 0, "prefill_batch_max": 0,
-                      "prefill_backend": None}
+                      "prefill_backend": None, "jit_retraces": 0}
 
     def _steps(self):
         """Resolve the jitted step pair against the CURRENT kernel-dispatch
         state (lru-cached, so this is a dict hit per tick)."""
         from repro.kernels import dispatch as kd
         return _jit_steps(self.cfg, self.max_len, kd.use_pallas())
+
+    def _track_retraces(self) -> None:
+        """Record how many signatures the shared jitted step pair has
+        compiled. Every distinct (g, width, kv_width) prefill shape and
+        every decode shape is one XLA program; all three come off static
+        bucket ladders (g <= slots; width/kv_width powers of two capped
+        at max_len), so this must stay bounded for ANY fleet mix — the
+        regression test pins the bound. The count is the lru-shared
+        truth for this (cfg, max_len, backend) key, so engine churn
+        (pool replicas, fleet reruns) must not grow it either."""
+        decode_step, prefill_step = self._steps()
+        self.stats["jit_retraces"] = (decode_step._cache_size()
+                                      + prefill_step._cache_size())
 
     def clone(self, *, seed: Optional[int] = None) -> "ServingEngine":
         """A fresh engine over the SAME config and params (no re-init)
@@ -330,6 +353,11 @@ class ServingEngine:
             pos0[i] = j.off
             slot_idx[i] = slot
             temps[i] = self.active[slot].temperature
+        # kv_width is pinned to the SAME power-of-two bucket ladder as the
+        # chunk width (static jit arg): a mixed-length fleet can only ever
+        # produce O(log(max_len)) distinct kv_width values, so the
+        # (g, width, kv_width) retrace space stays bounded no matter how
+        # prompt lengths vary step to step (stats["jit_retraces"]).
         kv_width = self._bucket(int(max(pos0[i] + take[i]
                                         for i in range(g))))
         from repro.kernels import dispatch as kd
@@ -342,6 +370,7 @@ class ServingEngine:
         self.stats["prefill_calls"] += 1
         self.stats["prefill_batch_max"] = max(
             self.stats["prefill_batch_max"], g)
+        self._track_retraces()
         return _PrefillPass(jobs, take, first)
 
     def _prefill_commit(self, p: _PrefillPass) -> None:
@@ -420,6 +449,7 @@ class ServingEngine:
         nxt, self.pos, self.cache, self.key = decode_step(
             self.params, jnp.asarray(tokens), self.pos, self.cache,
             self.key, jnp.asarray(temps), jnp.asarray(live))
+        self._track_retraces()
         return _DecodePass(live_slots, nxt)
 
     def _decode_commit(self, d: _DecodePass) -> List[Request]:

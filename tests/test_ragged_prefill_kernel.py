@@ -144,6 +144,53 @@ def test_ragged_prefill_property(G, S, gqa, hd, windowed, seed):
                                atol=2e-3, rtol=2e-3)
 
 
+def test_masked_block_skip_fires():
+    """The fully-masked-block skip must actually FIRE on serving-shaped
+    traces, not just mask correctly: NaN-poison every KV line that only
+    dead blocks touch. A kernel that computes a dead block anyway turns
+    the poison into NaN output via ``0 * NaN`` inside ``dot(p, v)``; a
+    kernel whose ``pl.when`` skips it never loads the poison."""
+    G, S, W, H, KV, hd = 3, 16, 64, 4, 2, 16
+    bq, bk = 8, 16
+    q, k, v, _, _ = _case_inputs(G, S, W, H, KV, hd, seed=21)
+    take = jnp.asarray([16, 8, 0], jnp.int32)
+    pos0 = jnp.asarray([0, 20, 0], jnp.int32)
+    want = np.asarray(ref.ragged_prefill_attention_ref(q, k, v, pos0, take))
+
+    kp, vp = np.asarray(k).copy(), np.asarray(v).copy()
+    for g in range(G):
+        # first block boundary past the last valid key pos0+take-1: every
+        # block from here on is dead for EVERY q block of row g
+        end = int(pos0[g] + take[g])
+        boundary = -(-end // bk) * bk if end else 0
+        kp[g, boundary:] = np.nan
+        vp[g, boundary:] = np.nan
+    out = np.asarray(ops.ragged_prefill_attention(
+        jnp.asarray(q), jnp.asarray(kp), jnp.asarray(vp), pos0, take,
+        bq=bq, bk=bk))
+    assert np.isfinite(out).all(), "dead KV block was computed, not skipped"
+    np.testing.assert_allclose(out, want, atol=2e-3, rtol=2e-3)
+
+    # sliding window: leading blocks entirely below pos0 - window are
+    # dead for every q block of the row too
+    window = 8
+    g1, s1 = 1, 16
+    q1, k1, v1, _, _ = _case_inputs(g1, s1, W, H, KV, hd, seed=22)
+    p1 = jnp.asarray([40], jnp.int32)
+    t1 = jnp.asarray([16], jnp.int32)
+    want1 = np.asarray(ref.ragged_prefill_attention_ref(
+        q1, k1, v1, p1, t1, window=window))
+    k1p, v1p = np.asarray(k1).copy(), np.asarray(v1).copy()
+    low = ((int(p1[0]) - window) // bk) * bk      # blocks ending <= 32
+    k1p[0, :low] = np.nan
+    v1p[0, :low] = np.nan
+    out1 = np.asarray(ops.ragged_prefill_attention(
+        q1, jnp.asarray(k1p), jnp.asarray(v1p), p1, t1, window=window,
+        bq=bq, bk=bk))
+    assert np.isfinite(out1).all(), "below-window KV block was computed"
+    np.testing.assert_allclose(out1, want1, atol=2e-3, rtol=2e-3)
+
+
 # ---- pooled-cache end-to-end through serve_prefill_chunk ------------------
 
 def test_engine_chunked_prefill_pallas_token_identical(model_zoo):
