@@ -28,6 +28,13 @@ single engine on concurrent fleet wall-clock: extra replica slots drain
 the cloud backlog sooner and each pass overlaps one replica's host
 bookkeeping with another's device compute.
 
+Degraded section: the pooled fleet runs clean (``real-faultfree``) and
+under a seeded chaos plan (``real-degraded`` — 10% injected cloud submit
+failures + one replica crash mid-run) with scheduler retry/degradation
+armed, reporting the wall-clock overhead of absorbing the faults plus
+the recovery counters (retries/timeouts/degraded/failovers/deaths).
+Every query must still complete or the bench itself fails.
+
 Two final sections microbench the serving attention ops themselves —
 jnp reference vs Pallas kernel for ragged chunked prefill
 (``prefill-ref`` / ``prefill-pallas`` rows) and for batched decode
@@ -254,6 +261,77 @@ def run_pool(n_queries=12, bench="gpqa", *, arch="qwen2-1.5b", replicas=2,
     return rows, speedup
 
 
+def run_degraded(n_queries=12, bench="gpqa", *, arch="qwen2-1.5b",
+                 replicas=2, slots=4):
+    """Chaos-overhead section: the same pumped cloud-bound fleet runs
+    clean (``real-faultfree``) and under a seeded fault plan
+    (``real-degraded`` — 10% injected cloud submit failures plus one
+    replica crash mid-run) with scheduler recovery armed. Every query
+    must still complete; the row records the wall-clock overhead of
+    riding out the faults (retry backoff + failover restarts + degraded
+    edge decodes) next to the recovery counters that explain it."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.core.planner import SyntheticPlanner
+    from repro.core.scheduler import RetryPolicy
+    from repro.data.tasks import WorldModel, gen_benchmark
+    from repro.models import model as M
+    from repro.serving.engine import JAXExecutor, ServingEngine
+    from repro.serving.faults import FaultPlan
+    from repro.serving.pool import EnginePool
+
+    cfg = get_config(arch).reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    wm = WorldModel()
+    qs = gen_benchmark(bench, n_queries)
+
+    def serve(faults, retry):
+        edge_e = ServingEngine(cfg, params, batch_slots=2, max_len=160,
+                               prefill_chunk=64)
+        pool = EnginePool.replicate(cfg, params, replicas=replicas,
+                                    batch_slots=slots, max_len=160,
+                                    prefill_chunk=64)
+        edge = JAXExecutor(edge_e, wm, cloud=False, concurrency=1)
+        cloud = JAXExecutor(pool, wm, cloud=True, price_out=3.2e-5)
+        rt = ServingRuntime(edge, cloud, _CloudBoundPolicy(),
+                            planner=SyntheticPlanner(),
+                            max_inflight=n_queries, pump=True,
+                            faults=faults, retry=retry)
+        return rt.serve(qs)
+
+    serve(None, None)                     # jit compiles outside both timings
+    plan = FaultPlan(seed=0, submit_fail_rate=0.10, crash_replica=((1, 20),))
+    retry = RetryPolicy(max_retries=2, timeout_s=30.0)
+    rows = []
+    for mode, faults, rp in (("real-faultfree", None, None),
+                             ("real-degraded", plan, retry)):
+        rep = serve(faults, rp)
+        assert all(r is not None and len(r.results) == r.dag.n
+                   for r in rep.results), f"{mode}: dropped a query"
+        s = rep.stats
+        rows.append({
+            "mode": mode,
+            "queries": n_queries,
+            "cloud_replicas": replicas,
+            "qps": rep.n / rep.wall_s if rep.wall_s > 0 else 0.0,
+            "p50": rep.p50_latency,
+            "p99": rep.p99_latency,
+            "wall_s": rep.wall_s,
+            "retries": s.get("retries", 0),
+            "timeouts": s.get("timeouts", 0),
+            "degraded": s.get("degraded", 0),
+            "failovers": s.get("cloud_failovers", 0),
+            "deaths": s.get("cloud_deaths", 0),
+            "injected_submit_faults":
+                s.get("injected", {}).get("submit_faults", 0),
+        })
+    rows[1]["overhead_pct"] = 100.0 * (
+        rows[1]["wall_s"] / max(rows[0]["wall_s"], 1e-9) - 1.0)
+    return rows, rows[1]["overhead_pct"]
+
+
 def run_prefill_microbench(*, G=4, S=64, W=256, H=4, KV=2, hd=64, iters=3):
     """Ref-vs-kernel ragged chunked-prefill attention microbench.
 
@@ -361,6 +439,10 @@ def main():
                          "every replica's slots leased)")
     ap.add_argument("--pool-replicas", type=int, default=2,
                     help="cloud pool replicas for the pooled section")
+    ap.add_argument("--degraded-queries", type=int, default=12,
+                    help="chaos-overhead section query count: clean vs "
+                         "10%% injected cloud faults + a replica crash "
+                         "(0 disables)")
     ap.add_argument("--benchmark", default="gpqa")
     ap.add_argument("--json", default="BENCH_serve.json",
                     help="machine-readable output path ('' disables)")
@@ -409,6 +491,22 @@ def main():
             print(f"WARNING: pooled cloud did not beat the single engine "
                   f"({pspeed:.2f}x)")
         json_rows += pool_rows
+
+    if args.degraded_queries > 0:
+        deg_rows, overhead = run_degraded(args.degraded_queries,
+                                          args.benchmark)
+        C.print_csv("serve_degraded",
+                    [k for k in deg_rows[1].keys()],
+                    [[r.get(k) for k in deg_rows[1].keys()]
+                     for r in deg_rows])
+        print(f"\nchaos overhead: {overhead:+.1f}% wall-clock to absorb "
+              f"{deg_rows[1]['injected_submit_faults']} injected faults "
+              f"+ {deg_rows[1]['deaths']} replica death(s) "
+              f"({deg_rows[1]['retries']} retries, "
+              f"{deg_rows[1]['degraded']} degraded, "
+              f"{deg_rows[1]['failovers']} failovers) — all "
+              f"{deg_rows[1]['queries']} queries completed")
+        json_rows += deg_rows
 
     if args.prefill_iters > 0:
         pf_rows = run_prefill_microbench(iters=args.prefill_iters)

@@ -20,6 +20,19 @@ the paper's per-query Algorithm 1 exactly.
 The same scheduler drives either the analytic WorldModel executor (used
 for benchmark tables) or real JAX-model executors from repro.serving
 (used in examples/integration tests) through the Executor protocol.
+
+Failure semantics (``retry=RetryPolicy(...)``): an executor raising from
+``run``/``submit``, or a dispatched subtask exceeding ``timeout_s``, is
+retried up to ``max_retries`` times with capped exponential backoff;
+a *cloud* subtask that exhausts its retries degrades to the edge
+executor through the same path spill uses (its attempt counter resets —
+the edge is a different resource). Only an edge-side exhaustion (or
+``degrade_to_edge=False``) surfaces as an error. Timed-out attempts are
+charged against the per-query and global budgets (tokens already
+generated cost real money even when discarded), so the utility model
+stays honest under faults. With ``retry=None`` (default) any executor
+exception propagates unchanged — exactly the pre-fault-tolerance
+behavior, and fault-free runs are bit-identical either way.
 """
 from __future__ import annotations
 
@@ -63,6 +76,41 @@ class SubtaskResult:
     tok_in: int
     tok_out: int
     answer: str = ""
+    retries: int = 0           # failed attempts absorbed before this result
+    degraded: bool = False     # cloud subtask that fell back to the edge
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Scheduler-side recovery knobs (see module docstring for the
+    contract). ``backoff(n)`` is the delay before attempt ``n``'s
+    re-dispatch: ``min(cap, base * 2**(n-1))``."""
+
+    max_retries: int = 2
+    backoff_base: float = 0.05
+    backoff_cap: float = 2.0
+    timeout_s: Optional[float] = None   # per-attempt deadline; None = off
+    degrade_to_edge: bool = True
+
+    def backoff(self, attempt: int) -> float:
+        if attempt <= 0:
+            return 0.0
+        return min(self.backoff_cap, self.backoff_base * 2.0 ** (attempt - 1))
+
+
+@dataclass(eq=False)   # identity semantics: one pending dispatch attempt
+class _Dispatch:
+    """A routed subtask waiting for (or holding) an executor slot, with
+    its retry lineage. Mutated in place across attempts so the recovery
+    path (retry → degrade) carries state without re-routing."""
+
+    r: int
+    node: Node
+    attempt: int = 0           # failures on the CURRENT side (resets on
+    #                            degrade: the edge is a fresh resource)
+    retries: int = 0           # total failed attempts, both sides
+    degraded: bool = False
+    not_before: float = 0.0    # backoff gate (fleet-clock seconds)
 
 
 @dataclass
@@ -93,6 +141,14 @@ class QueryResult:
         if not self.offload:
             return 0.0
         return float(np.mean(list(self.offload.values())))
+
+    @property
+    def n_retries(self) -> int:
+        return sum(r.retries for r in self.results.values())
+
+    @property
+    def n_degraded(self) -> int:
+        return sum(1 for r in self.results.values() if r.degraded)
 
 
 class WorldModelExecutor:
@@ -175,8 +231,9 @@ class _QueryState:
     indeg: Dict[int, int] = field(default_factory=dict)
     children: Dict[int, List[int]] = field(default_factory=dict)
     ready: List[Node] = field(default_factory=list)
-    waiting: List[Tuple[int, Node]] = field(default_factory=list)
+    waiting: List["_Dispatch"] = field(default_factory=list)
     n_done: int = 0
+    done_sids: set = field(default_factory=set)
     admitted: bool = False
     admit_clock: float = 0.0
     result: Optional[QueryResult] = None
@@ -237,7 +294,9 @@ class FleetScheduler:
                  max_inflight: Optional[int] = None,
                  global_budget: Optional[TwoBudgetThreshold] = None,
                  spill_to_edge: bool = False,
-                 pump: Optional[bool] = None):
+                 pump: Optional[bool] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 stall_grace: float = 5.0):
         if getattr(edge, "concurrency", 1) < 1 or \
                 getattr(cloud, "concurrency", 1) < 1:
             raise ValueError("executor pools need concurrency >= 1")
@@ -249,9 +308,15 @@ class FleetScheduler:
         self.global_budget = global_budget
         self.spill_to_edge = spill_to_edge
         self.pump = pump
+        self.retry = retry
+        # with retry enabled the pumped driver tolerates idle passes (back-
+        # off gates + injected stalls park work with nothing to step) up to
+        # this many seconds before declaring the fleet stalled
+        self.stall_grace = stall_grace
         self.makespan = 0.0
         self.stats = {"forced_edge": 0, "spills": 0, "peak_inflight": 0,
-                      "dispatched": 0}
+                      "dispatched": 0, "retries": 0, "timeouts": 0,
+                      "degraded": 0, "exec_faults": 0, "fault_cost": 0.0}
         self._states: List[_QueryState] = []
 
     def _async_capable(self) -> bool:
@@ -295,12 +360,17 @@ class FleetScheduler:
 
     def _observe_completion(self, qs: _QueryState, node: Node, r: int,
                             res: SubtaskResult, start: float, end: float,
-                            prev_clock: float) -> None:
+                            prev_clock: float,
+                            disp: Optional[_Dispatch] = None) -> None:
         """Shared completion bookkeeping for both event-loop drivers:
         charge per-query and fleet budgets (dl is the fleet clock advance,
         NOT the per-subtask latency sum, which would scale with
         concurrency), notify the policy, log the schedule event and
         unlock children into the ready queue."""
+        if disp is not None:
+            res.retries = disp.retries
+            res.degraded = disp.degraded
+        qs.done_sids.add(node.sid)
         qs.ctx.k_used += res.api_cost
         qs.ctx.l_used += res.latency
         if self.global_budget is not None:
@@ -315,7 +385,50 @@ class FleetScheduler:
                 qs.ready.append(qs.dag.node(c))
         qs.n_done += 1
 
-    def _make_loop(self, st: "_LoopState", dispatch_action,
+    # ---- fault recovery ------------------------------------------------
+    def _charge_fault(self, qs: _QueryState, cost: float, elapsed: float,
+                      dl: float = 0.0) -> None:
+        """A failed/timed-out attempt still spent real resources: charge
+        the per-query duals (cost + wasted wall-clock) and the global $
+        budget. ``dl`` is the global-clock advance not yet charged by a
+        completion (the drivers keep the dl chain gap-free)."""
+        qs.ctx.k_used += cost
+        qs.ctx.l_used += elapsed
+        self.stats["fault_cost"] += cost
+        if self.global_budget is not None:
+            self.global_budget.spend(dk=cost, dl=dl)
+
+    def _handle_fault(self, qs: _QueryState, disp: _Dispatch,
+                      err: BaseException, requeue) -> None:
+        """Recovery decision for one failed attempt (executor raise or
+        deadline timeout): retry with backoff while attempts remain, then
+        degrade cloud→edge, then surface. ``requeue(qs, disp, delay)`` is
+        driver-specific (sim: heap event; pump: not_before gate)."""
+        if self.retry is None:
+            raise err
+        disp.attempt += 1
+        disp.retries += 1
+        if disp.attempt <= self.retry.max_retries:
+            self.stats["retries"] += 1
+            requeue(qs, disp, self.retry.backoff(disp.attempt))
+        elif disp.r == 1 and self.retry.degrade_to_edge:
+            # cloud exhausted: re-route to the edge through the offload
+            # map (same bookkeeping the spill path uses); the edge is a
+            # fresh resource, so its attempt counter starts over
+            disp.r = 0
+            disp.attempt = 0
+            disp.degraded = True
+            qs.offload[disp.node.sid] = 0
+            self.stats["degraded"] += 1
+            requeue(qs, disp, 0.0)
+        else:
+            raise RuntimeError(
+                f"subtask (qid={qs.query.qid}, sid={disp.node.sid}) failed "
+                f"after {disp.retries} retries on "
+                f"{'cloud' if disp.r else 'edge'}"
+                + (" (degraded)" if disp.degraded else "")) from err
+
+    def _make_loop(self, st: "_LoopState", dispatch_action, fail_action,
                    live_saturation: bool = False):
         """Build the admission/routing/dispatch closures shared by both
         event-loop drivers; only the dispatch *action* differs (sim:
@@ -354,11 +467,13 @@ class FleetScheduler:
                     self.stats["forced_edge"] += 1
                 qs.offload[node.sid] = r
                 qs.ctx.position += 1
-                qs.waiting.append((r, node))
+                qs.waiting.append(_Dispatch(r, node))
 
         def dispatch_one(qs: _QueryState) -> bool:
-            for j, (r, node) in enumerate(qs.waiting):
-                ex = self.cloud if r else self.edge
+            for j, disp in enumerate(qs.waiting):
+                if disp.not_before > st.clock:
+                    continue           # still backing off after a failure
+                ex = self.cloud if disp.r else self.edge
                 if st.busy[id(ex)] >= ex.concurrency:
                     # pumped driver: spill-to-edge fires only when the
                     # cloud is REALLY out of capacity — engine-backed
@@ -368,67 +483,144 @@ class FleetScheduler:
                     # executors without the hook: hitting the busy-count
                     # cap (the check that just failed above) IS
                     # saturation
-                    if not (self.spill_to_edge and r == 1
+                    if not (self.spill_to_edge and disp.r == 1
                             and st.busy[id(self.edge)]
                             < self.edge.concurrency
                             and (not live_saturation or _saturated(ex))):
                         continue
-                    ex, r = self.edge, 0
-                    qs.offload[node.sid] = 0
+                    ex, disp.r = self.edge, 0
+                    qs.offload[disp.node.sid] = 0
                     self.stats["spills"] += 1
                 qs.waiting.pop(j)
                 st.busy[id(ex)] += 1
-                dispatch_action(qs, node, r, ex)
                 self.stats["dispatched"] += 1
+                try:
+                    dispatch_action(qs, disp, ex)
+                except Exception as exc:
+                    # executor refused the attempt (injected fault or real
+                    # submit error): the slot was never really taken
+                    st.busy[id(ex)] -= 1
+                    self.stats["exec_faults"] += 1
+                    fail_action(qs, disp, exc)
                 return True
             return False
 
-        def dispatch_all():
+        def dispatch_all() -> bool:
             # round-robin over admitted-unfinished queries: one dispatch
             # per query per pass until no pool slot can take any waiting
             # subtask
+            any_progress = False
             progressed = True
             while progressed:
                 progressed = False
                 for qs in st.active:
                     if qs.waiting:
                         progressed |= dispatch_one(qs)
+                any_progress |= progressed
+            return any_progress
 
         return admit_next, route_ready, dispatch_all
 
+    def _stuck_dump(self, qs: _QueryState) -> str:
+        """One diagnostic line for a query wedged in the loop: where every
+        node sits (done / in flight / waiting+backoff / ready / blocked)
+        and the budget state — enough to debug a deadlock under faults
+        without re-running with a debugger attached."""
+        waiting = [(d.node.sid, "cloud" if d.r else "edge", d.attempt,
+                    round(d.not_before, 3)) for d in qs.waiting]
+        pend = {d.node.sid for d in qs.waiting} | {n.sid for n in qs.ready}
+        inflight = sorted(set(qs.offload) - qs.done_sids - pend)
+        blocked = sorted(s for s, d in qs.indeg.items()
+                         if d > 0 and s not in qs.done_sids)
+        return (f"  qid={qs.query.qid}: admitted={qs.admitted} "
+                f"done={qs.n_done}/{qs.dag.n} "
+                f"ready={sorted(n.sid for n in qs.ready)} "
+                f"waiting(sid,side,attempt,not_before)={waiting} "
+                f"inflight={inflight} blocked(indeg>0)={blocked} "
+                f"k_used={qs.ctx.k_used:.4f} l_used={qs.ctx.l_used:.3f}")
+
     def _collect_results(self) -> List[QueryResult]:
-        stuck = [qs.query.qid for qs in self._states if qs.result is None]
+        stuck = [qs for qs in self._states if qs.result is None]
         if stuck:
-            raise RuntimeError(f"fleet drained with unfinished queries "
-                               f"(scheduler bug or malformed DAG): {stuck}")
+            dump = "\n".join(self._stuck_dump(qs) for qs in stuck)
+            raise RuntimeError(
+                f"fleet drained with unfinished queries (scheduler bug or "
+                f"malformed DAG): {[qs.query.qid for qs in stuck]}\n{dump}")
         return [qs.result for qs in self._states]
 
     def _run_sim(self) -> List[QueryResult]:
-        """Simulated-clock driver (analytic executors)."""
+        """Simulated-clock driver (analytic executors). Faults become heap
+        events like completions: an attempt whose analytic latency exceeds
+        ``timeout_s`` schedules a "timeout" event instead of a "done" (the
+        slot is held until the deadline fires, as it would be live), and a
+        retry waits out its backoff as a "retry" event so the clock keeps
+        advancing and the loop can never spin on a backoff gate."""
         st = _LoopState(self)
         counter = itertools.count()
-        # heap rows: (end, tick, qi, sid, node, routed, start)
-        running: List[Tuple[float, int, int, int, Node, int, float]] = []
+        timeout_s = self.retry.timeout_s if self.retry is not None else None
+        # heap rows: (time, tick, kind, qi, dispatch, start, result) with
+        # kind in {"done", "timeout", "retry"}; tick breaks all ties so
+        # ordering never compares beyond (time, tick)
+        running: List[Tuple] = []
+        # fleet clock already charged to the global dl budget: "done" pops
+        # charge the full advance since the last charge, so interleaved
+        # fault events leave no gaps and fault-free runs charge exactly
+        # the original prev_clock chain
+        dl_mark = 0.0
 
-        def dispatch_action(qs, node, r, ex):
-            res = ex.run(qs.query, node, qs.results)
+        def dispatch_action(qs, disp, ex):
+            res = ex.run(qs.query, disp.node, qs.results)
+            if timeout_s is not None and res.latency > timeout_s:
+                heapq.heappush(running, (st.clock + timeout_s,
+                                         next(counter), "timeout", qs.index,
+                                         disp, st.clock, res))
+                return
             heapq.heappush(running, (st.clock + res.latency, next(counter),
-                                     qs.index, node.sid, node, r, st.clock))
-            qs.results[node.sid] = res  # provisional (fields are final)
+                                     "done", qs.index, disp, st.clock, res))
+            qs.results[disp.node.sid] = res  # provisional (fields final)
+
+        def requeue(qs, disp, delay):
+            heapq.heappush(running, (st.clock + delay, next(counter),
+                                     "retry", qs.index, disp, st.clock,
+                                     None))
+
+        def fail_action(qs, disp, exc):
+            self._handle_fault(qs, disp, exc, requeue)
 
         admit_next, route_ready, dispatch_all = self._make_loop(
-            st, dispatch_action)
+            st, dispatch_action, fail_action)
         admit_next()
         dispatch_all()
         while running:
-            end, _, qi, sid, node, r, start = heapq.heappop(running)
-            prev_clock, st.clock = st.clock, end
+            t, _, kind, qi, disp, start, res = heapq.heappop(running)
             qs = self._states[qi]
-            ex = self.cloud if r else self.edge
+            if kind == "retry":
+                st.clock = t
+                disp.not_before = 0.0
+                qs.waiting.append(disp)
+                dispatch_all()
+                continue
+            if kind == "timeout":
+                st.clock = t
+                st.busy[id(self.cloud if disp.r else self.edge)] -= 1
+                self.stats["timeouts"] += 1
+                self._charge_fault(qs, res.api_cost, timeout_s,
+                                   dl=t - dl_mark)
+                dl_mark = t
+                self._handle_fault(
+                    qs, disp, RuntimeError(
+                        f"subtask (qid={qs.query.qid}, "
+                        f"sid={disp.node.sid}) exceeded deadline "
+                        f"{timeout_s}s (analytic latency "
+                        f"{res.latency:.3f}s)"), requeue)
+                dispatch_all()
+                continue
+            prev_clock, st.clock = dl_mark, t
+            dl_mark = t
+            ex = self.cloud if disp.r else self.edge
             st.busy[id(ex)] -= 1
-            res = qs.results[sid]
-            self._observe_completion(qs, node, r, res, start, st.clock,
-                                     prev_clock)
+            self._observe_completion(qs, disp.node, disp.r, res, start,
+                                     st.clock, prev_clock, disp=disp)
             route_ready(qs)
             if qs.n_done == qs.dag.n:
                 self._finalize(qs, st.clock)
@@ -448,26 +640,62 @@ class FleetScheduler:
         t0 = time.perf_counter()
         st = _LoopState(self)
         prev_clock = 0.0
+        timeout_s = self.retry.timeout_s if self.retry is not None else None
+        idle_since = 0.0
         pools = list({id(ex): ex for ex in (self.edge, self.cloud)}.values())
-        # in-flight rows: [future, qs, node, r, executor, start_clock]
+        # in-flight rows: [future, qs, dispatch, executor, start_clock]
         inflight: List[List] = []
 
-        def dispatch_action(qs, node, r, ex):
-            fut = ex.submit(qs.query, node, qs.results)
-            inflight.append([fut, qs, node, r, ex, st.clock])
+        def dispatch_action(qs, disp, ex):
+            fut = ex.submit(qs.query, disp.node, qs.results)
+            inflight.append([fut, qs, disp, ex, st.clock])
+
+        def requeue(qs, disp, delay):
+            # re-dispatch happens from the normal waiting queue once the
+            # fleet clock passes the backoff gate
+            disp.not_before = st.clock + delay
+            qs.waiting.append(disp)
+
+        def fail_action(qs, disp, exc):
+            self._handle_fault(qs, disp, exc, requeue)
 
         admit_next, route_ready, dispatch_all = self._make_loop(
-            st, dispatch_action, live_saturation=True)
+            st, dispatch_action, fail_action, live_saturation=True)
         admit_next()
         dispatch_all()
-        while inflight:
+        while inflight or any(qs.waiting for qs in st.active):
             stepped = False
             for ex in pools:
                 stepped |= bool(ex.pump())
             st.clock = time.perf_counter() - t0
+            fault_fired = False
+            if timeout_s is not None:
+                for row in [r_ for r_ in inflight
+                            if st.clock - r_[4] > timeout_s]:
+                    fut, qs, disp, ex, start = row
+                    inflight.remove(row)
+                    st.busy[id(ex)] -= 1
+                    cancel = getattr(ex, "cancel", None)
+                    if cancel is not None:
+                        cancel(fut)
+                    # tokens the engine already decoded for the abandoned
+                    # attempt were paid for — charge them
+                    cost_fn = getattr(ex, "attempt_cost", None)
+                    cost = float(cost_fn(fut)) if cost_fn is not None \
+                        else 0.0
+                    self.stats["timeouts"] += 1
+                    self._charge_fault(qs, cost, st.clock - start,
+                                       dl=st.clock - prev_clock)
+                    prev_clock = st.clock
+                    self._handle_fault(
+                        qs, disp, RuntimeError(
+                            f"subtask (qid={qs.query.qid}, "
+                            f"sid={disp.node.sid}) exceeded deadline "
+                            f"{timeout_s}s in flight"), requeue)
+                    fault_fired = True
             done_rows = []
             for row in inflight:
-                res = row[4].poll(row[0])
+                res = row[3].poll(row[0])
                 if res is not None:
                     done_rows.append((row, res))
             # same-tick completions are observed in (qid, sid) order, not
@@ -476,20 +704,41 @@ class FleetScheduler:
             # sequence that is stable across runs/replica counts even
             # when co-batched subtasks finish on the same pump pass
             done_rows.sort(key=lambda dr: (dr[0][1].query.qid,
-                                           dr[0][2].sid))
-            if not done_rows:
-                if not stepped:
+                                           dr[0][2].node.sid))
+            if not done_rows and not fault_fired:
+                if self.retry is None:
+                    # pre-recovery contract, preserved exactly: an idle
+                    # pass with work in flight is a wiring bug
+                    if not stepped:
+                        raise RuntimeError(
+                            "fleet pump stalled: subtasks in flight but "
+                            "every engine is idle (executor/engine "
+                            "mismatch?)")
+                    continue
+                # recovery enabled: idle passes are expected (backoff
+                # gates, injected stalls) — give backoff-expired work a
+                # dispatch chance, and only past the grace window does an
+                # idle fleet become a hard stall
+                if bool(dispatch_all()) or stepped:
+                    idle_since = st.clock
+                elif st.clock - idle_since > self.stall_grace:
                     raise RuntimeError(
-                        "fleet pump stalled: subtasks in flight but every "
-                        "engine is idle (executor/engine mismatch?)")
+                        f"fleet pump stalled for "
+                        f"{st.clock - idle_since:.1f}s (grace "
+                        f"{self.stall_grace:.1f}s) with {len(inflight)} "
+                        f"subtasks in flight:\n"
+                        + "\n".join(self._stuck_dump(qs)
+                                    for qs in st.active))
+                else:
+                    time.sleep(0.001)
                 continue
             for row, res in done_rows:
-                _fut, qs, node, r, ex, start = row
+                _fut, qs, disp, ex, start = row
                 inflight.remove(row)
                 st.busy[id(ex)] -= 1
-                qs.results[node.sid] = res
-                self._observe_completion(qs, node, r, res, start, st.clock,
-                                         prev_clock)
+                qs.results[disp.node.sid] = res
+                self._observe_completion(qs, disp.node, disp.r, res, start,
+                                         st.clock, prev_clock, disp=disp)
                 prev_clock = st.clock
                 route_ready(qs)
                 if qs.n_done == qs.dag.n:
@@ -497,6 +746,7 @@ class FleetScheduler:
                     st.active.remove(qs)
                     admit_next()
             dispatch_all()
+            idle_since = st.clock
 
         self.makespan = st.clock
         return self._collect_results()

@@ -13,6 +13,15 @@ slots); ``--no-pump`` forces the old synchronous per-subtask dispatch;
 ``--sequential`` restores the seed's one-query-at-a-time loop;
 ``--global-k-max`` caps fleet-wide API spend.
 
+``--faults SPEC`` drives a chaos run: deterministic seeded fault
+injection (cloud submit failures, stalls, replica crash/stragglers —
+see ``serving.faults.FaultPlan.parse``) absorbed by scheduler-side
+recovery (``--max-retries`` / ``--timeout`` / ``--backoff-base``) and
+pool-side replica failover. Example::
+
+  PYTHONPATH=src python -m repro.launch.serve --queries 12 \
+      --cloud-replicas 2 --faults "submit_fail=0.1,crash=1@20,seed=0"
+
 On TPU the cloud engine would run the large model on the production mesh;
 on this container both engines run reduced configs on CPU (same code).
 
@@ -64,6 +73,18 @@ def main():
                          "co-resident decodes)")
     ap.add_argument("--calibrate", action="store_true",
                     help="enable the LinUCB calibration head")
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="seeded chaos spec, e.g. "
+                         "'submit_fail=0.1,stall=0.05@0.3,crash=1@20,"
+                         "slow=0:4,seed=3' (see serving.faults)")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="recovery: attempts per side before a cloud "
+                         "subtask degrades to the edge")
+    ap.add_argument("--timeout", type=float, default=None,
+                    help="recovery: per-attempt deadline in seconds")
+    ap.add_argument("--backoff-base", type=float, default=0.05,
+                    help="recovery: base of the capped exponential "
+                         "retry backoff")
     args = ap.parse_args()
 
     wm = WorldModel()
@@ -90,11 +111,18 @@ def main():
         calibrator = LinUCBCalibrator(dim=3)
     policy = HybridFlowPolicy(router, tau0=args.tau0, k_max=args.k_max,
                               calibrator=calibrator, wm=wm)
+    retry = None
+    if args.faults is not None or args.timeout is not None:
+        from repro.core.scheduler import RetryPolicy
+        retry = RetryPolicy(max_retries=args.max_retries,
+                            backoff_base=args.backoff_base,
+                            timeout_s=args.timeout)
     runtime = ServingRuntime(edge, cloud, policy, planner=SyntheticPlanner(),
                              max_inflight=args.max_inflight,
                              global_k_max=args.global_k_max,
                              pump=False if args.no_pump else None,
-                             replicas=args.cloud_replicas)
+                             replicas=args.cloud_replicas,
+                             retry=retry, faults=args.faults)
 
     qs = gen_benchmark(args.benchmark, args.queries)
     t0 = time.time()
@@ -117,6 +145,20 @@ def main():
     if report.stats.get("forced_edge"):
         print(f"global budget forced {report.stats['forced_edge']} "
               f"subtasks onto the edge")
+    if args.faults is not None:
+        s = report.stats
+        print(f"chaos: injected={s.get('injected')} | recovery: "
+              f"retries={s.get('retries', 0)} "
+              f"timeouts={s.get('timeouts', 0)} "
+              f"degraded={s.get('degraded', 0)} | pool: "
+              f"deaths={s.get('cloud_deaths', 0)} "
+              f"failovers={s.get('cloud_failovers', 0)} "
+              f"hedges={s.get('cloud_hedges', 0)} "
+              f"health={s.get('cloud_replica_health')}")
+        n_ret = sum(r.n_retries for r in report.results)
+        n_deg = sum(r.n_degraded for r in report.results)
+        print(f"per-query recovery: {n_ret} retried attempts, "
+              f"{n_deg} degraded subtasks, 0 failed queries")
     cloud_eng = runtime.cloud.engine     # EnginePool when replicas > 1
     print(f"edge: {edge_engine.stats} | cloud: {cloud_eng.stats}")
     if hasattr(cloud_eng, "occupancy"):

@@ -1,8 +1,46 @@
 """Real-model serving: slot-batched engines, replicated engine pools,
-the Executor adapter and the multi-query fleet runtime."""
+the Executor adapter, the multi-query fleet runtime, and deterministic
+fault injection.
+
+Failure-semantics contract
+--------------------------
+The serving stack absorbs failures at three layers; each layer has a
+fixed answer to "what retries, what degrades, what surfaces":
+
+* **Subtask attempts** (``core.scheduler.RetryPolicy``): an executor
+  exception on ``run``/``submit`` or a per-attempt deadline
+  (``timeout_s``) overrun **retries** with capped exponential backoff,
+  up to ``max_retries`` times per side. Timed-out attempts are cancelled
+  (the KV slot frees) and their sunk cost — tokens already decoded — is
+  charged to the per-query and global budgets.
+* **Cloud exhaustion** (graceful degradation): a *cloud* subtask out of
+  retries **degrades** to the edge executor through the same offload
+  bookkeeping the spill path uses, with a fresh attempt budget; its
+  ``SubtaskResult`` records ``degraded=True`` and the absorbed
+  ``retries``. Only an *edge*-side exhaustion (or
+  ``degrade_to_edge=False``) **surfaces** as a ``RuntimeError``.
+* **Pool replicas** (``EnginePool``): a replica whose pump step raises is
+  marked **dead** — the worker-thread exception is captured at the join,
+  never lost — and its in-flight requests **fail over** to the
+  least-loaded survivor (restarted from the prompt; generation state
+  died with the replica's KV slots). A replica holding work without
+  progress for ``suspect_after`` passes turns **suspect**: its work is
+  hedged onto healthy replicas and dispatch deprioritizes it until it
+  recovers. Only all-replicas-dead (or ``failover=False``) surfaces.
+
+With ``retry=None`` and no faults, every fault path is provably inert:
+runs are bit-identical to the pre-fault-tolerance stack (chaos suite:
+``tests/test_faults.py``). ``serving.faults`` provides the seeded
+``FaultPlan``/``FaultInjector`` chaos harness that exercises all of the
+above reproducibly (``launch/serve.py --faults``).
+"""
+from repro.core.scheduler import RetryPolicy
 from repro.serving.engine import JAXExecutor, Request, ServingEngine
+from repro.serving.faults import (FaultError, FaultInjector, FaultPlan,
+                                  InjectedFault)
 from repro.serving.pool import EnginePool
 from repro.serving.runtime import RuntimeReport, ServingRuntime
 
-__all__ = ["EnginePool", "JAXExecutor", "Request", "RuntimeReport",
-           "ServingEngine", "ServingRuntime"]
+__all__ = ["EnginePool", "FaultError", "FaultInjector", "FaultPlan",
+           "InjectedFault", "JAXExecutor", "Request", "RetryPolicy",
+           "RuntimeReport", "ServingEngine", "ServingRuntime"]

@@ -304,6 +304,26 @@ class ServingEngine:
     def n_active(self) -> int:
         return sum(a is not None for a in self.active)
 
+    def cancel(self, req: Request) -> bool:
+        """Withdraw a request: drop it from the admission queue, or free
+        its KV slot (and any in-progress prefill) if already resident —
+        the slot returns to the pool on the next admit. Decoded tokens
+        stay on the request; the caller decides whether to discard them.
+        Safe to call on an already-finished or foreign request (no-op,
+        returns False)."""
+        for j, q in enumerate(self.queue):
+            if q is req:
+                self.queue.pop(j)
+                req._engine = None
+                return True
+        for slot, r in enumerate(self.active):
+            if r is req:
+                self.active[slot] = None
+                self._prefilling.pop(slot, None)
+                req._engine = None
+                return True
+        return False
+
     # ---- engine internals ----------------------------------------------
     def _admit(self) -> None:
         for slot in range(self.slots):
@@ -565,6 +585,18 @@ class JAXExecutor:
         """Advance the engine (or every loaded pool replica) one step if
         it has work. Returns progress."""
         return bool(self.engine.pump())
+
+    def cancel(self, h: _Inflight) -> bool:
+        """Withdraw a (timed-out) attempt so its KV slot frees now — the
+        fleet scheduler's deadline path calls this before re-dispatch."""
+        cancel = getattr(self.engine, "cancel", None)
+        return bool(cancel(h.req)) if cancel is not None else False
+
+    def attempt_cost(self, h: _Inflight) -> float:
+        """$ already sunk into an attempt: tokens decoded so far. The
+        scheduler charges this for abandoned (timed-out) attempts so the
+        budget model stays honest under faults."""
+        return len(h.req.output_ids) * self.price_out if self.cloud else 0.0
 
     def poll(self, h: _Inflight):
         """Collect a finished future; None while still decoding."""

@@ -1,0 +1,296 @@
+"""Deterministic fault injection for the serving stack (chaos harness).
+
+HybridFlow treats the cloud as an expensive, *unreliable* resource — yet a
+serving run is only trustworthy under failure if failures can be produced
+on demand, identically, run after run. This module provides that harness:
+
+* ``FaultPlan`` — a declarative, **seeded** description of what goes wrong:
+  cloud submit failures, completion stalls, replica crashes at a given
+  pump pass, persistently slow (straggler) replicas. Every decision is a
+  pure function of ``(seed, kind, key, attempt)`` via a SHA-256 hash — no
+  RNG state, so the same plan replays the same faults regardless of
+  thread timing, replica count or poll order. ``FaultPlan.parse`` reads
+  the compact spec string ``launch/serve.py --faults`` takes, e.g.
+  ``"submit_fail=0.1,stall=0.05@0.3,crash=1@8,slow=0:4,seed=3"``.
+* ``FaultInjector`` — the plan's runtime: owns per-(side, qid, sid)
+  attempt counters (so a *retry* of the same subtask redraws its fault),
+  an event log, and fault counters for reports.
+* ``FaultyExecutor`` / ``FaultyAsyncExecutor`` — wrap any scheduler
+  ``Executor`` (analytic or engine-backed). Submit faults raise
+  ``InjectedFault`` from ``run``/``submit``; stalls inflate the simulated
+  latency (sync) or hold a finished future past its completion (async),
+  which is what arms the scheduler's deadline timeouts.
+* ``FaultyReplica`` — wraps one ``EnginePool`` replica engine: crashes
+  (raises from the pump step at pass N, once) and stragglers (the
+  replica only does work every k-th pass) flow through the pool's
+  health/failover machinery exactly like real replica failures.
+
+The injector is *passive* by design: recovery lives in
+``core.scheduler.RetryPolicy`` (retry / backoff / timeout / degrade) and
+``serving.pool.EnginePool`` (health states + failover). A plan with all
+rates at zero injects nothing and perturbs nothing — fault-free runs stay
+bit-identical to an unwrapped stack (tested in ``tests/test_faults.py``).
+"""
+from __future__ import annotations
+
+import hashlib
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+class FaultError(RuntimeError):
+    """A serving-side failure the scheduler may retry (base class for
+    injected faults; real executor errors are handled the same way)."""
+
+
+class InjectedFault(FaultError):
+    """A failure produced by a ``FaultPlan`` (never a code bug)."""
+
+
+def _unit(*parts) -> float:
+    """Deterministic uniform [0, 1) from the key parts (no RNG state)."""
+    h = hashlib.sha256("|".join(str(p) for p in parts).encode()).digest()
+    return int.from_bytes(h[:8], "little") / 2.0 ** 64
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """Seeded chaos description; every field defaults to 'no fault'."""
+
+    seed: int = 0
+    submit_fail_rate: float = 0.0   # P(raise) per (qid, sid, attempt) submit
+    stall_rate: float = 0.0         # P(stall) per (qid, sid, attempt)
+    stall_s: float = 0.3            # stall duration: added latency (sim) /
+    #                                 completion hold (async wall-clock)
+    crash_replica: Tuple[Tuple[int, int], ...] = ()   # (replica, pump pass)
+    slow_replica: Tuple[Tuple[int, int], ...] = ()    # (replica, every k-th)
+    edge_faults: bool = False       # also inject on the edge executor
+
+    @property
+    def has_executor_faults(self) -> bool:
+        return self.submit_fail_rate > 0 or self.stall_rate > 0
+
+    @property
+    def has_replica_faults(self) -> bool:
+        return bool(self.crash_replica or self.slow_replica)
+
+    @classmethod
+    def parse(cls, spec: str) -> "FaultPlan":
+        """Parse the ``--faults`` spec: comma-separated ``k=v`` items.
+
+        ``seed=N`` | ``submit_fail=R`` | ``stall=R@SECS`` |
+        ``crash=IDX@PASS`` | ``slow=IDX:K`` | ``edge=1`` — ``crash`` and
+        ``slow`` may repeat (``crash=0@8,crash=1@20``).
+        """
+        kw: Dict = {"crash_replica": [], "slow_replica": []}
+        for item in filter(None, (s.strip() for s in spec.split(","))):
+            key, _, val = item.partition("=")
+            if key == "seed":
+                kw["seed"] = int(val)
+            elif key in ("submit_fail", "fail"):
+                kw["submit_fail_rate"] = float(val)
+            elif key == "stall":
+                rate, _, secs = val.partition("@")
+                kw["stall_rate"] = float(rate)
+                if secs:
+                    kw["stall_s"] = float(secs)
+            elif key == "crash":
+                idx, _, at = val.partition("@")
+                kw["crash_replica"].append((int(idx), int(at or 1)))
+            elif key == "slow":
+                idx, _, k = val.partition(":")
+                kw["slow_replica"].append((int(idx), int(k or 2)))
+            elif key == "edge":
+                kw["edge_faults"] = val not in ("0", "false", "")
+            else:
+                raise ValueError(f"unknown --faults item {item!r}")
+        kw["crash_replica"] = tuple(kw["crash_replica"])
+        kw["slow_replica"] = tuple(kw["slow_replica"])
+        return cls(**kw)
+
+
+class FaultInjector:
+    """Runtime of one ``FaultPlan``: counters, event log and wrappers."""
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self.stats = {"submit_faults": 0, "stalls": 0, "replica_crashes": 0,
+                      "replica_skips": 0}
+        self.events: List[Tuple] = []
+        self._attempts: Dict[Tuple, int] = {}
+        self._crashed: set = set()
+
+    # ---- executor-side decisions ---------------------------------------
+    def on_submit(self, side: str, qid: str, sid: int) -> int:
+        """Draw the submit fault for this attempt; raises ``InjectedFault``
+        on a hit. Returns the attempt index consumed (0-based) so the
+        stall draw for the same attempt stays aligned."""
+        key = (side, qid, sid)
+        attempt = self._attempts.get(key, 0)
+        self._attempts[key] = attempt + 1
+        if (self.plan.submit_fail_rate > 0
+                and _unit(self.plan.seed, "submit", side, qid, sid, attempt)
+                < self.plan.submit_fail_rate):
+            self.stats["submit_faults"] += 1
+            self.events.append(("submit_fault", side, qid, sid, attempt))
+            raise InjectedFault(
+                f"injected {side} submit failure (qid={qid}, sid={sid}, "
+                f"attempt={attempt})")
+        return attempt
+
+    def stall_for(self, side: str, qid: str, sid: int, attempt: int) -> float:
+        """Stall duration (seconds) for this attempt; 0.0 = no stall."""
+        if (self.plan.stall_rate > 0
+                and _unit(self.plan.seed, "stall", side, qid, sid, attempt)
+                < self.plan.stall_rate):
+            self.stats["stalls"] += 1
+            self.events.append(("stall", side, qid, sid, attempt))
+            return self.plan.stall_s
+        return 0.0
+
+    # ---- replica-side decisions ----------------------------------------
+    def replica_tick(self, idx: int, pump_pass: int) -> None:
+        """Raises ``InjectedFault`` when replica ``idx`` is due to crash
+        (once; the pool marks it dead and fails its work over)."""
+        for ridx, at in self.plan.crash_replica:
+            if ridx == idx and pump_pass >= at and idx not in self._crashed:
+                self._crashed.add(idx)
+                self.stats["replica_crashes"] += 1
+                self.events.append(("replica_crash", idx, pump_pass))
+                raise InjectedFault(
+                    f"injected crash of replica {idx} at pump pass "
+                    f"{pump_pass}")
+
+    def replica_skips(self, idx: int, pump_pass: int) -> bool:
+        """True when straggler replica ``idx`` sits out this pass (it only
+        makes progress every k-th pass)."""
+        for ridx, k in self.plan.slow_replica:
+            if ridx == idx and k > 1 and pump_pass % k != 0:
+                self.stats["replica_skips"] += 1
+                return True
+        return False
+
+    # ---- wrappers -------------------------------------------------------
+    def wrap_executor(self, ex, side: Optional[str] = None):
+        """Wrap a scheduler Executor (async surface detected)."""
+        side = side or ("cloud" if getattr(ex, "cloud", True) else "edge")
+        cls = FaultyAsyncExecutor if hasattr(ex, "submit") else FaultyExecutor
+        return cls(ex, self, side)
+
+    def wrap_pool(self, pool):
+        """Wrap every replica of an ``EnginePool`` in place (crash/slow
+        injection); returns the pool."""
+        pool.engines = [FaultyReplica(e, self, i)
+                        for i, e in enumerate(pool.engines)]
+        return pool
+
+
+class FaultyExecutor:
+    """Synchronous Executor wrapper: injects on ``run`` (sim driver)."""
+
+    def __init__(self, inner, injector: FaultInjector, side: str):
+        self._inner = inner
+        self._injector = injector
+        self._side = side
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+    def run(self, query, node, dep_results):
+        attempt = self._injector.on_submit(self._side, query.qid, node.sid)
+        res = self._inner.run(query, node, dep_results)
+        extra = self._injector.stall_for(self._side, query.qid, node.sid,
+                                         attempt)
+        if extra:
+            res.latency += extra     # the sim clock sees the stall
+        return res
+
+
+class FaultyAsyncExecutor(FaultyExecutor):
+    """Async Executor wrapper: submit faults raise, stalls hold a finished
+    future for ``stall_s`` wall-clock seconds past its true completion —
+    the scheduler's deadline timeout is what rescues a held subtask."""
+
+    def __init__(self, inner, injector: FaultInjector, side: str):
+        super().__init__(inner, injector, side)
+        self._holds: Dict[int, List[Optional[float]]] = {}
+
+    def submit(self, query, node, dep_results):
+        attempt = self._injector.on_submit(self._side, query.qid, node.sid)
+        h = self._inner.submit(query, node, dep_results)
+        extra = self._injector.stall_for(self._side, query.qid, node.sid,
+                                         attempt)
+        if extra:
+            self._holds[id(h)] = [extra, None]   # [hold_s, release_at]
+        return h
+
+    def poll(self, h):
+        res = self._inner.poll(h)
+        if res is None:
+            return None
+        hold = self._holds.get(id(h))
+        if hold is not None:
+            if hold[1] is None:                  # first sighting of done
+                hold[1] = time.perf_counter() + hold[0]
+            if time.perf_counter() < hold[1]:
+                return None
+            del self._holds[id(h)]
+        return res
+
+    def cancel(self, h) -> bool:
+        self._holds.pop(id(h), None)
+        cancel = getattr(self._inner, "cancel", None)
+        return bool(cancel(h)) if cancel is not None else False
+
+
+@dataclass
+class FaultyReplica:
+    """One ``EnginePool`` replica under chaos: counts its own pump passes
+    and consults the injector — a due crash raises out of the pass (the
+    pool's failover path takes over), a straggler pass does no work while
+    ``has_work`` stays true (the pool's suspect/hedge path takes over).
+    Everything else delegates to the wrapped ``ServingEngine``."""
+
+    _inner: object
+    _injector: FaultInjector
+    _idx: int
+    _pass: int = 0
+    _skip: bool = field(default=False, repr=False)
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+    def _tick(self) -> None:
+        self._pass += 1
+        self._injector.replica_tick(self._idx, self._pass)
+        self._skip = self._injector.replica_skips(self._idx, self._pass)
+
+    def submit(self, prompt, **kw):
+        req = self._inner.submit(prompt, **kw)
+        req._engine = self           # ownership points at the wrapper so
+        return req                   # pool cancel/run_until resolve to it
+
+    # one pump pass enters either through step() (threaded / single-loaded
+    # pool pass) or through _admit() (sequential launch-all/commit-all
+    # pass); both tick exactly once per pass
+    def step(self):
+        self._tick()
+        if self._skip:
+            return []
+        return self._inner.step()
+
+    def _admit(self):
+        self._tick()
+        if not self._skip:
+            self._inner._admit()
+
+    def _prefill_launch(self):
+        return None if self._skip else self._inner._prefill_launch()
+
+    def _decode_launch(self):
+        return None if self._skip else self._inner._decode_launch()
+
+
+__all__ = ["FaultError", "InjectedFault", "FaultPlan", "FaultInjector",
+           "FaultyExecutor", "FaultyAsyncExecutor", "FaultyReplica"]

@@ -38,9 +38,30 @@ Dispatch contract
   a pool with any free replica slot keeps cloud-routed work on the
   cloud.
 * **Occupancy stats** — ``occupancy()`` reports per-replica slot-lease
-  state (active / queued / free / requests / slot_reuses / peak_active);
-  ``stats`` aggregates the replicas' counters into one engine-shaped
-  dict (plus ``replicas`` and ``pump_passes``) for drop-in reporting.
+  state (active / queued / free / requests / slot_reuses / peak_active /
+  health); ``stats`` aggregates the replicas' counters into one
+  engine-shaped dict (plus ``replicas`` and ``pump_passes``) for drop-in
+  reporting.
+
+Failure semantics
+-----------------
+Every replica carries a health state: **healthy → suspect → dead**. A
+replica whose step *raises* (in the thread pump, the single-loaded fast
+path, or any phase of the sequential pass) is marked **dead**: the
+exception is captured — never lost in a worker thread, never allowed to
+strand sibling replicas' finished requests — and with ``failover=True``
+(default) the dead replica's in-flight work (active slots in slot order,
+then queue FIFO) is re-submitted to the least-loaded survivor, restarted
+from the prompt (decoded tokens are discarded; generation state lives in
+the replica's KV slots, which died with it). With ``failover=False`` the
+captured exception re-raises from ``step`` instead. When every replica
+is dead, ``step``/``submit`` raise. ``suspect_after=N`` arms straggler
+detection: a replica that holds work but makes no progress for N
+consecutive pool passes turns **suspect** — its work is hedged onto
+strictly-healthy replicas and dispatch deprioritizes it until it makes
+progress again (suspect is reversible; dead is not). All transitions
+land in ``pool_stats`` (deaths / failovers / suspects / hedges /
+replica_errors).
 
 ``EnginePool.replicate`` builds R fresh replicas from a config + params;
 ``EnginePool.like`` scales out an existing engine, keeping it as replica
@@ -50,7 +71,7 @@ distinct sampling seeds.
 from __future__ import annotations
 
 from concurrent.futures import ThreadPoolExecutor
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.serving.engine import Request, ServingEngine
 
@@ -59,28 +80,42 @@ class EnginePool:
     """R serving-engine replicas behind one engine-shaped surface."""
 
     def __init__(self, engines: Sequence[ServingEngine], *,
-                 threads: bool = True):
+                 threads: bool = True, failover: bool = True,
+                 suspect_after: Optional[int] = None):
         if not engines:
             raise ValueError("EnginePool needs at least one replica")
         self.engines: List[ServingEngine] = list(engines)
         self.threads = threads
+        self.failover = failover
+        self.suspect_after = suspect_after
+        self.health: List[str] = ["healthy"] * len(self.engines)
         self._tp: Optional[ThreadPoolExecutor] = None
+        self._last_progress = [-1] * len(self.engines)
+        self._stalled_passes = [0] * len(self.engines)
         self.pool_stats: Dict[str, object] = {
             "pump_passes": 0,
             "submitted": [0] * len(self.engines),
+            "deaths": 0,
+            "failovers": 0,
+            "suspects": 0,
+            "hedges": 0,
+            "replica_errors": [],
         }
 
     # ---- constructors --------------------------------------------------
     @classmethod
     def replicate(cls, cfg, params, *, replicas: int, seed: int = 0,
-                  threads: bool = True, **engine_kw) -> "EnginePool":
+                  threads: bool = True, failover: bool = True,
+                  suspect_after: Optional[int] = None,
+                  **engine_kw) -> "EnginePool":
         """R fresh replicas sharing one params pytree. Replica i samples
         with ``seed + i`` so replica 0 matches a lone engine built with
         ``seed`` (the R=1 bit-identity guarantee)."""
         if replicas < 1:
             raise ValueError("replicas must be >= 1")
         return cls([ServingEngine(cfg, params, seed=seed + i, **engine_kw)
-                    for i in range(replicas)], threads=threads)
+                    for i in range(replicas)], threads=threads,
+                   failover=failover, suspect_after=suspect_after)
 
     @classmethod
     def like(cls, engine: ServingEngine, replicas: int, *,
@@ -99,11 +134,16 @@ class EnginePool:
     def n_replicas(self) -> int:
         return len(self.engines)
 
+    def _alive(self) -> List[int]:
+        return [i for i in range(len(self.engines))
+                if self.health[i] != "dead"]
+
     @property
     def capacity(self) -> int:
         """Total KV slots across replicas (replicas × slots when uniform)
-        — what ``JAXExecutor`` derives its dispatch concurrency from."""
-        return sum(e.slots for e in self.engines)
+        — what ``JAXExecutor`` derives its dispatch concurrency from.
+        Dead replicas contribute nothing."""
+        return sum(self.engines[i].slots for i in self._alive())
 
     @property
     def n_active(self) -> int:
@@ -115,14 +155,15 @@ class EnginePool:
 
     @property
     def has_work(self) -> bool:
-        return any(e.has_work for e in self.engines)
+        return any(self.engines[i].has_work for i in self._alive())
 
     @property
     def all_saturated(self) -> bool:
-        """True when no replica has a free slot left (spill eligibility:
-        cloud→edge spill must not fire while any replica could still
-        admit the request)."""
-        return all(e.load >= e.slots for e in self.engines)
+        """True when no surviving replica has a free slot left (spill
+        eligibility: cloud→edge spill must not fire while any live
+        replica could still admit the request)."""
+        return all(self.engines[i].load >= self.engines[i].slots
+                   for i in self._alive())
 
     def occupancy(self) -> List[Dict[str, int]]:
         """Per-replica slot-lease snapshot."""
@@ -131,7 +172,8 @@ class EnginePool:
                  "free": max(e.slots - e.load, 0),
                  "requests": e.stats["requests"],
                  "slot_reuses": e.stats["slot_reuses"],
-                 "peak_active": e.stats["peak_active"]}
+                 "peak_active": e.stats["peak_active"],
+                 "health": self.health[i]}
                 for i, e in enumerate(self.engines)]
 
     # gauges describe one replica's high-water mark, not fleet volume:
@@ -156,51 +198,189 @@ class EnginePool:
         agg.setdefault("prefill_backend", None)
         agg["replicas"] = self.n_replicas
         agg["pump_passes"] = self.pool_stats["pump_passes"]
+        agg["deaths"] = self.pool_stats["deaths"]
+        agg["failovers"] = self.pool_stats["failovers"]
+        agg["suspects"] = self.pool_stats["suspects"]
+        agg["hedges"] = self.pool_stats["hedges"]
+        agg["replica_health"] = list(self.health)
         return agg
 
     # ---- engine surface ------------------------------------------------
     def submit(self, prompt, **kw) -> Request:
-        """Enqueue on the least-loaded replica (ties → lowest index)."""
-        i = min(range(len(self.engines)),
-                key=lambda j: (self.engines[j].load, j))
+        """Enqueue on the least-loaded surviving replica (healthy
+        replicas beat suspect ones; ties → lowest index)."""
+        alive = self._alive()
+        if not alive:
+            raise RuntimeError("EnginePool.submit: all replicas are dead")
+        i = min(alive, key=lambda j: (self.health[j] != "healthy",
+                                      self.engines[j].load, j))
         self.pool_stats["submitted"][i] += 1
         return self.engines[i].submit(prompt, **kw)
 
     def step(self) -> List[Request]:
-        """One pool pass: step every replica with pending work (see the
-        module docstring for the threaded vs launch-all/commit-all pass
-        shapes); for a single loaded replica this is exactly
-        ``ServingEngine.step``."""
-        loaded = [e for e in self.engines if e.has_work]
+        """One pool pass: step every surviving replica with pending work
+        (see the module docstring for the threaded vs
+        launch-all/commit-all pass shapes); for a single loaded replica
+        this is exactly ``ServingEngine.step``. A replica that raises —
+        from its worker thread, the fast path, or any sequential phase —
+        is handed to ``_kill_replica`` *after* every sibling's results
+        are joined, so one crash never loses another replica's finished
+        requests or deadlocks the join."""
+        loaded = [(i, self.engines[i]) for i in self._alive()
+                  if self.engines[i].has_work]
         if not loaded:
             return []
         self.pool_stats["pump_passes"] += 1
+        finished: List[Request] = []
+        errors: List[Tuple[int, BaseException]] = []
         if len(loaded) == 1:
-            return loaded[0].step()
-        if self.threads:
+            i, e = loaded[0]
+            try:
+                finished = e.step()
+            except Exception as exc:
+                errors.append((i, exc))
+        elif self.threads:
             if self._tp is None:
                 self._tp = ThreadPoolExecutor(
                     max_workers=len(self.engines),
                     thread_name_prefix="enginepool")
             # one worker per loaded replica: replica state is thread-
             # private, results join in replica-index order (determinism)
-            futs = [self._tp.submit(e.step) for e in loaded]
-            finished: List[Request] = []
-            for f in futs:
-                finished.extend(f.result())
-            return finished
-        for e in loaded:
-            e._admit()
-        prefills = [(e, e._prefill_launch()) for e in loaded]
-        for e, p in prefills:
-            if p is not None:
-                e._prefill_commit(p)
-        decodes = [(e, e._decode_launch()) for e in loaded]
-        finished = []
-        for e, d in decodes:
-            if d is not None:
-                finished.extend(e._decode_commit(d))
+            futs = [(i, self._tp.submit(e.step)) for i, e in loaded]
+            for i, f in futs:
+                try:
+                    finished.extend(f.result())
+                except Exception as exc:
+                    errors.append((i, exc))
+        else:
+            # launch-all/commit-all: a replica that raises in any phase
+            # drops out of the later phases of this pass
+            live = []
+            for i, e in loaded:
+                try:
+                    e._admit()
+                    live.append((i, e))
+                except Exception as exc:
+                    errors.append((i, exc))
+            prefills = []
+            for i, e in live:
+                try:
+                    prefills.append((i, e, e._prefill_launch()))
+                except Exception as exc:
+                    errors.append((i, exc))
+            live = []
+            for i, e, p in prefills:
+                try:
+                    if p is not None:
+                        e._prefill_commit(p)
+                    live.append((i, e))
+                except Exception as exc:
+                    errors.append((i, exc))
+            decodes = []
+            for i, e in live:
+                try:
+                    decodes.append((i, e, e._decode_launch()))
+                except Exception as exc:
+                    errors.append((i, exc))
+            for i, e, d in decodes:
+                try:
+                    if d is not None:
+                        finished.extend(e._decode_commit(d))
+                except Exception as exc:
+                    errors.append((i, exc))
+        for i, exc in errors:
+            self._kill_replica(i, exc)
+        self._update_health()
         return finished
+
+    # ---- failure handling ----------------------------------------------
+    def _kill_replica(self, i: int, exc: BaseException) -> None:
+        """Mark replica ``i`` dead and fail its work over to survivors
+        (active slots in slot order, then queue FIFO — deterministic).
+        Failed-over requests restart from the prompt: their generation
+        state lived in the dead replica's KV slots. With
+        ``failover=False`` the captured exception surfaces instead."""
+        self.health[i] = "dead"
+        self.pool_stats["replica_errors"].append(
+            f"replica {i}: {type(exc).__name__}: {exc}")
+        if not self.failover:
+            raise RuntimeError(
+                f"replica {i} step failed (failover disabled)") from exc
+        self.pool_stats["deaths"] += 1
+        dead = self.engines[i]
+        orphans = [r for r in dead.active if r is not None and not r.done]
+        orphans.extend(dead.queue)
+        for r in orphans:
+            dead.cancel(r)
+        alive = self._alive()
+        if orphans and not alive:
+            raise RuntimeError(
+                f"all {len(self.engines)} replicas dead with "
+                f"{len(orphans)} requests stranded") from exc
+        for r in orphans:
+            j = min(alive, key=lambda j_: (self.health[j_] != "healthy",
+                                           self.engines[j_].load, j_))
+            r.output_ids.clear()
+            r.done = False
+            r._engine = self.engines[j]
+            self.engines[j].queue.append(r)
+            self.pool_stats["failovers"] += 1
+            self.pool_stats["submitted"][j] += 1
+
+    def _update_health(self) -> None:
+        """Straggler detection (armed by ``suspect_after``): a replica
+        holding work that makes no counter progress for N consecutive
+        passes turns suspect and its work is hedged away; first progress
+        afterwards restores it to healthy."""
+        if self.suspect_after is None:
+            return
+        for i, e in enumerate(self.engines):
+            if self.health[i] == "dead":
+                continue
+            prog = (e.stats["tokens_out"] + e.stats["prefill_tokens"]
+                    + e.stats["requests"])
+            if prog != self._last_progress[i]:
+                self._last_progress[i] = prog
+                self._stalled_passes[i] = 0
+                if self.health[i] == "suspect":
+                    self.health[i] = "healthy"
+            elif e.has_work:
+                self._stalled_passes[i] += 1
+                if (self._stalled_passes[i] >= self.suspect_after
+                        and self.health[i] == "healthy"):
+                    self.health[i] = "suspect"
+                    self.pool_stats["suspects"] += 1
+                    self._hedge_from(i)
+
+    def _hedge_from(self, i: int) -> None:
+        """Hedged re-dispatch: move a suspect replica's pending work onto
+        strictly-healthy replicas (restarted from the prompt). The
+        suspect keeps nothing but stays eligible to recover; with no
+        healthy replica left the work stays put."""
+        healthy = [j for j in range(len(self.engines))
+                   if self.health[j] == "healthy"]
+        if not healthy:
+            return
+        src = self.engines[i]
+        moved = [r for r in src.active if r is not None and not r.done]
+        moved.extend(src.queue)
+        for r in moved:
+            src.cancel(r)
+            j = min(healthy, key=lambda j_: (self.engines[j_].load, j_))
+            r.output_ids.clear()
+            r.done = False
+            r._engine = self.engines[j]
+            self.engines[j].queue.append(r)
+            self.pool_stats["hedges"] += 1
+            self.pool_stats["submitted"][j] += 1
+
+    def cancel(self, req: Request) -> bool:
+        """Cancel a pool-owned request wherever it currently lives."""
+        owner = getattr(req, "_engine", None)
+        for e in self.engines:
+            if owner is e:
+                return e.cancel(req)
+        return False
 
     def pump(self) -> bool:
         """Advance every replica with pending work one step, in one
@@ -229,6 +409,13 @@ class EnginePool:
         for _ in range(max_steps):
             if req.done:
                 return req
+            # re-resolve ownership every pass: failover/hedging may have
+            # moved the request to another replica mid-wait
+            owner = getattr(req, "_engine", None)
+            if not any(owner is e for e in self.engines):
+                raise RuntimeError(
+                    f"request {req.rid} lost its replica mid-run "
+                    f"(cancelled without failover?)")
             if not owner.has_work:
                 raise RuntimeError(
                     f"replica drained with request {req.rid} unfinished "

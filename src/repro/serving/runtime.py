@@ -40,6 +40,19 @@ shards an engine-backed cloud executor across an R-replica
 ``EnginePool`` (shared params, independent KV slot pools, least-loaded
 dispatch): cloud concurrency then derives from pool capacity and the
 report's stats carry per-replica occupancy.
+
+Fault tolerance: ``retry=RetryPolicy(...)`` arms scheduler-side recovery
+(retry w/ backoff, deadline timeouts, cloud→edge degradation — see
+``core.scheduler``), and ``faults=`` injects deterministic chaos (a
+``FaultPlan``, a pre-built ``FaultInjector``, or a spec string like
+``"submit_fail=0.1,crash=1@8,seed=3"`` — see ``serving.faults``): the
+cloud executor (and with ``edge=1`` the edge too) is wrapped for
+submit-failure/stall injection and an ``EnginePool``-backed cloud gets
+its replicas wrapped for crash/straggler injection. Passing ``faults``
+without ``retry`` defaults to ``RetryPolicy()`` — injecting failures
+with recovery disarmed would only prove the fleet can crash. Fault and
+recovery counters land in ``report.stats`` (``injected``, ``retries``,
+``timeouts``, ``degraded``, ``cloud_deaths``/``cloud_failovers``…).
 """
 from __future__ import annotations
 
@@ -53,7 +66,7 @@ import numpy as np
 from repro.core.dag import PlanDAG
 from repro.core.dual import TwoBudgetThreshold
 from repro.core.scheduler import (Executor, FleetScheduler, QueryResult,
-                                  RoutingPolicy, Schedule)
+                                  RetryPolicy, RoutingPolicy, Schedule)
 from repro.data.tasks import Query
 
 
@@ -133,7 +146,10 @@ class ServingRuntime:
                  global_l_max: Optional[float] = None,
                  spill_to_edge: bool = False,
                  pump: Optional[bool] = None,
-                 replicas: Optional[int] = None):
+                 replicas: Optional[int] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 faults=None,
+                 stall_grace: float = 5.0):
         self.edge = edge
         self.cloud = self._pooled_cloud(cloud, replicas)
         self.policy = policy
@@ -143,9 +159,47 @@ class ServingRuntime:
         self.global_l_max = global_l_max
         self.spill_to_edge = spill_to_edge
         self.pump = pump
+        self.stall_grace = stall_grace
+        self.fault_injector = self._make_injector(faults)
+        # chaos without recovery would only prove the fleet can crash
+        self.retry = retry if retry is not None or faults is None \
+            else RetryPolicy()
+        self._wrap_faulty()
         self.global_budget: Optional[TwoBudgetThreshold] = None
         self._pending: List[Tuple[Query, PlanDAG, str,
                                   Optional[Schedule]]] = []
+
+    @staticmethod
+    def _make_injector(faults):
+        """Accept a spec string, a FaultPlan, or a ready FaultInjector."""
+        if faults is None:
+            return None
+        from repro.serving.faults import FaultInjector, FaultPlan
+        if isinstance(faults, FaultInjector):
+            return faults
+        if isinstance(faults, str):
+            faults = FaultPlan.parse(faults)
+        return FaultInjector(faults)
+
+    def _wrap_faulty(self) -> None:
+        """Install the fault plan: wrap executors for submit/stall
+        injection and pool replicas for crash/straggler injection."""
+        inj = self.fault_injector
+        if inj is None:
+            return
+        plan = inj.plan
+        if plan.has_replica_faults:
+            from repro.serving.pool import EnginePool
+            eng = getattr(self.cloud, "engine", None)
+            if not isinstance(eng, EnginePool):
+                raise ValueError(
+                    "replica faults (crash=/slow=) need an EnginePool-"
+                    "backed cloud executor (pass replicas=R)")
+            inj.wrap_pool(eng)
+        if plan.has_executor_faults:
+            self.cloud = inj.wrap_executor(self.cloud, side="cloud")
+            if plan.edge_faults:
+                self.edge = inj.wrap_executor(self.edge, side="edge")
 
     @staticmethod
     def _pooled_cloud(cloud: Executor, replicas: Optional[int]) -> Executor:
@@ -193,6 +247,14 @@ class ServingRuntime:
             stats[f"{name}_replica_requests"] = [o["requests"]
                                                  for o in occ()]
             stats[f"{name}_pump_passes"] = eng.pool_stats["pump_passes"]
+            for key in ("deaths", "failovers", "suspects", "hedges"):
+                if key in eng.pool_stats:
+                    stats[f"{name}_{key}"] = eng.pool_stats[key]
+            health = getattr(eng, "health", None)
+            if health is not None:
+                stats[f"{name}_replica_health"] = list(health)
+        if self.fault_injector is not None:
+            stats["injected"] = dict(self.fault_injector.stats)
         return stats
 
     # ---- admission ----------------------------------------------------
@@ -219,7 +281,8 @@ class ServingRuntime:
                                max_inflight=self.max_inflight,
                                global_budget=self.global_budget,
                                spill_to_edge=self.spill_to_edge,
-                               pump=self.pump)
+                               pump=self.pump, retry=self.retry,
+                               stall_grace=self.stall_grace)
         for q, dag, status, sched in batch:
             fleet.submit(q, dag, self.policy, plan_status=status,
                          schedule_out=sched)
@@ -244,7 +307,8 @@ class ServingRuntime:
         for q, dag, status, sched in batch:
             fleet = FleetScheduler(self.edge, self.cloud,
                                    global_budget=self.global_budget,
-                                   pump=self.pump)
+                                   pump=self.pump, retry=self.retry,
+                                   stall_grace=self.stall_grace)
             fleet.submit(q, dag, self.policy, plan_status=status,
                          schedule_out=sched)
             results.extend(fleet.run())

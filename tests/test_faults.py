@@ -1,0 +1,350 @@
+"""Chaos suite: deterministic fault injection against the serving stack.
+
+Covers the failure-semantics contract end to end (see
+``serving/__init__``): seeded property chaos over the sim driver (fleet
+always terminates, no query dropped, budget accounting stays exact),
+fault-free bit-identity with the recovery machinery armed, scheduler
+timeout → retry → cloud→edge degradation on both drivers, EnginePool
+worker-thread exception capture + replica failover + straggler hedging,
+and the diagnostic dump on the drained-with-unfinished-queries error.
+
+``CHAOS_SEED`` (CI matrix) shifts every fault-plan seed so three CI jobs
+explore three disjoint chaos universes with the same assertions.
+"""
+import os
+
+import pytest
+from _prop import given, settings, st
+
+from repro.core.dag import Node, PlanDAG
+from repro.core.dual import TwoBudgetThreshold
+from repro.core.hybridflow import Pipeline, StaticPolicy
+from repro.core.scheduler import FleetScheduler, RetryPolicy
+from repro.data.tasks import Query, Subtask, WorldModel, gen_benchmark
+from repro.serving.faults import (FaultInjector, FaultPlan, InjectedFault)
+
+CHAOS_SEED = int(os.environ.get("CHAOS_SEED", "0"))
+
+
+def _sim_fleet(pipe, queries, *, faults=None, retry=None, policy_r=1,
+               global_budget=None, max_inflight=8):
+    """Analytic fleet with (optionally) a fault-wrapped cloud executor."""
+    cloud = pipe.cloud
+    inj = None
+    if faults is not None:
+        inj = FaultInjector(faults)
+        cloud = inj.wrap_executor(cloud, side="cloud")
+    fleet = FleetScheduler(pipe.edge, cloud, max_inflight=max_inflight,
+                           global_budget=global_budget, retry=retry)
+    for q in queries:
+        dag, status = pipe.planner.plan(q)
+        fleet.submit(q, dag, StaticPolicy(policy_r), plan_status=status)
+    return fleet, inj
+
+
+def _result_key(results):
+    return [(r.qid, r.final_correct, r.latency, r.api_cost,
+             sorted((s.sid, s.latency, s.api_cost, s.correct, s.answer)
+                    for s in r.results.values()),
+             sorted(r.offload.items()))
+            for r in results]
+
+
+def test_retry_backoff_capped_exponential():
+    rp = RetryPolicy(max_retries=5, backoff_base=0.1, backoff_cap=0.5)
+    assert rp.backoff(0) == 0.0
+    assert rp.backoff(1) == pytest.approx(0.1)
+    assert rp.backoff(2) == pytest.approx(0.2)
+    assert rp.backoff(3) == pytest.approx(0.4)
+    assert rp.backoff(4) == 0.5       # capped
+    assert rp.backoff(10) == 0.5
+
+
+def test_fault_plan_parse_round_trip():
+    plan = FaultPlan.parse("submit_fail=0.1,stall=0.05@0.3,crash=1@8,"
+                           "crash=0@20,slow=0:4,seed=3,edge=1")
+    assert plan.submit_fail_rate == 0.1
+    assert plan.stall_rate == 0.05 and plan.stall_s == 0.3
+    assert plan.crash_replica == ((1, 8), (0, 20))
+    assert plan.slow_replica == ((0, 4),)
+    assert plan.seed == 3 and plan.edge_faults
+    with pytest.raises(ValueError):
+        FaultPlan.parse("explode=1")
+    assert FaultPlan.parse("") == FaultPlan()
+
+
+def test_fault_plan_is_deterministic():
+    """Same plan, same key sequence -> identical fault decisions."""
+    plan = FaultPlan(seed=7, submit_fail_rate=0.3, stall_rate=0.3)
+    outcomes = []
+    for _ in range(2):
+        inj = FaultInjector(plan)
+        got = []
+        for sid in range(40):
+            try:
+                a = inj.on_submit("cloud", "q0", sid)
+                got.append(("ok", inj.stall_for("cloud", "q0", sid, a)))
+            except InjectedFault:
+                got.append(("fail", None))
+        outcomes.append(got)
+    assert outcomes[0] == outcomes[1]
+    assert any(o[0] == "fail" for o in outcomes[0])
+    assert any(o[1] for o in outcomes[0] if o[1] is not None)
+
+
+def test_fault_free_sim_bit_identical_with_recovery_armed():
+    """RetryPolicy + a zero-rate injector must not perturb a single bit
+    of the schedule: same makespan, same per-subtask results, same
+    dispatch count as the plain fleet."""
+    pipe = Pipeline()
+    queries = gen_benchmark("gpqa", 8)
+    plain, _ = _sim_fleet(pipe, queries)
+    r_plain = plain.run()
+    armed, _ = _sim_fleet(pipe, queries, faults=FaultPlan(seed=CHAOS_SEED),
+                          retry=RetryPolicy(max_retries=3, timeout_s=None))
+    r_armed = armed.run()
+    assert plain.makespan == armed.makespan
+    assert _result_key(r_plain) == _result_key(r_armed)
+    assert plain.stats["dispatched"] == armed.stats["dispatched"]
+    assert armed.stats["retries"] == armed.stats["degraded"] == 0
+    assert armed.stats["fault_cost"] == 0.0
+
+
+@settings(max_examples=int(os.environ.get("PROP_MAX_EXAMPLES", "10")),
+          deadline=None)
+@given(st.integers(0, 10 ** 6), st.floats(0.0, 0.3), st.floats(0.0, 0.3),
+       st.integers(1, 3))
+def test_chaos_fleet_always_terminates(seed, fail_rate, stall_rate,
+                                       max_retries):
+    """Random cloud-side fault plans (failure/stall rates up to 30%):
+    the fleet always terminates, no query is silently dropped, every
+    subtask has a result, and the global budget accounting stays exact —
+    spend equals completed api_cost plus the charged fault cost, and the
+    dl chain equals the makespan."""
+    pipe = Pipeline()
+    queries = gen_benchmark("gpqa", 6)
+    gb = TwoBudgetThreshold(tau0=0.0, k_max=1e9, l_max=1e9)
+    plan = FaultPlan(seed=seed + 977 * CHAOS_SEED,
+                     submit_fail_rate=fail_rate, stall_rate=stall_rate,
+                     stall_s=60.0)
+    fleet, inj = _sim_fleet(
+        pipe, queries, faults=plan, global_budget=gb,
+        retry=RetryPolicy(max_retries=max_retries, timeout_s=30.0))
+    results = fleet.run()
+    assert len(results) == len(queries)
+    for r in results:
+        assert r is not None
+        assert len(r.results) == r.dag.n          # no subtask dropped
+    done_cost = sum(r.api_cost for r in results)
+    assert gb.k_used == pytest.approx(
+        done_cost + fleet.stats["fault_cost"], abs=1e-9)
+    assert gb.l_used == pytest.approx(fleet.makespan, abs=1e-9)
+    # injector bookkeeping matches scheduler-observed faults
+    assert fleet.stats["exec_faults"] == inj.stats["submit_faults"]
+    n_ret = sum(r.n_retries for r in results)
+    if inj.stats["submit_faults"] or fleet.stats["timeouts"]:
+        assert n_ret > 0
+        assert n_ret == fleet.stats["retries"] + fleet.stats["degraded"]
+
+
+def test_sim_timeout_degrades_all_cloud_to_edge():
+    """Every cloud attempt stalls past the deadline and retries are
+    exhausted immediately -> every subtask lands on the edge, marked
+    degraded, and the offload map says edge."""
+    pipe = Pipeline()
+    queries = gen_benchmark("gpqa", 3)
+    fleet, inj = _sim_fleet(
+        pipe, queries,
+        faults=FaultPlan(seed=CHAOS_SEED, stall_rate=1.0, stall_s=1e4),
+        retry=RetryPolicy(max_retries=0, timeout_s=30.0))
+    results = fleet.run()
+    for r in results:
+        assert all(s.degraded for s in r.results.values())
+        assert all(v == 0 for v in r.offload.values())
+        assert r.api_cost == 0.0                  # nothing finished on cloud
+        assert r.n_degraded == r.dag.n
+    assert fleet.stats["timeouts"] == sum(r.dag.n for r in results)
+    assert fleet.stats["fault_cost"] > 0          # sunk cloud spend charged
+
+
+def test_exec_fault_without_retry_propagates():
+    """retry=None keeps the pre-fault-tolerance contract: the injected
+    exception surfaces unchanged."""
+    pipe = Pipeline()
+    fleet, _ = _sim_fleet(pipe, gen_benchmark("gpqa", 2),
+                          faults=FaultPlan(seed=1, submit_fail_rate=1.0))
+    with pytest.raises(InjectedFault):
+        fleet.run()
+
+
+def test_edge_exhaustion_surfaces_as_error():
+    """An edge-routed subtask out of retries has nowhere to degrade to:
+    the failure must surface, chained to the injected fault."""
+    pipe = Pipeline()
+    inj = FaultInjector(FaultPlan(seed=2, submit_fail_rate=1.0,
+                                  edge_faults=True))
+    fleet = FleetScheduler(inj.wrap_executor(pipe.edge, side="edge"),
+                           pipe.cloud, retry=RetryPolicy(max_retries=1))
+    q = gen_benchmark("gpqa", 1)[0]
+    dag, status = pipe.planner.plan(q)
+    fleet.submit(q, dag, StaticPolicy(0), plan_status=status)
+    with pytest.raises(RuntimeError, match="failed after"):
+        fleet.run()
+
+
+def test_stuck_query_error_includes_diagnostics():
+    """Satellite: the drained-with-unfinished-queries error must dump
+    per-query state (qid, node dispositions, budget) for debuggability."""
+    pipe = Pipeline()
+    fleet, _ = _sim_fleet(pipe, gen_benchmark("gpqa", 2))
+    with pytest.raises(RuntimeError) as ei:
+        fleet._collect_results()
+    msg = str(ei.value)
+    assert "fleet drained with unfinished queries" in msg
+    assert "qid=gpqa-0" in msg and "qid=gpqa-1" in msg
+    assert "blocked(indeg>0)=" in msg and "k_used=" in msg
+    assert "waiting(sid,side,attempt,not_before)=" in msg
+
+
+# ---- real-engine layer: pool failover + pumped-driver recovery ---------
+
+PLAN_KW = dict(batch_slots=2, max_len=96)
+
+
+def _flat_query(qid, n=2, tok_out=6):
+    sts = tuple(Subtask(i, f"{qid} part {i}", "ANALYZE", (), 0.5, 40,
+                        tok_out) for i in range(n))
+    dag = PlanDAG(tuple(Node(s.sid, s.desc, s.role, s.deps) for s in sts))
+    return Query(qid, "gpqa", f"flat query {qid}", sts), dag
+
+
+def _pool(model_zoo, replicas=2, **kw):
+    from repro.serving.pool import EnginePool
+    cfg, params = model_zoo("qwen2-1.5b")
+    return EnginePool.replicate(cfg, params, replicas=replicas, **PLAN_KW,
+                                **kw)
+
+
+def test_pool_thread_exception_propagates_when_failover_off(model_zoo):
+    """Satellite regression: a worker-thread step exception must reach
+    the caller at the join (the seed silently lost it / could deadlock),
+    without losing the sibling replica's finished work."""
+    pool = _pool(model_zoo, failover=False)
+
+    def boom():
+        raise ValueError("injected step explosion")
+
+    reqs = [pool.submit(f"prompt {i}", max_new_tokens=4) for i in range(4)]
+    pool.engines[1].step = boom
+    with pytest.raises(RuntimeError, match="replica 1 step failed"):
+        pool.run_until_done()
+    assert pool.health[1] == "dead"
+    assert "injected step explosion" in pool.pool_stats["replica_errors"][0]
+    del reqs
+
+
+def test_pool_replica_crash_fails_over_to_survivor(model_zoo):
+    """A dead replica's queued + active requests restart on the
+    survivor; every request still completes."""
+    pool = _pool(model_zoo)
+    inj = FaultInjector(FaultPlan(seed=CHAOS_SEED,
+                                  crash_replica=((1, 2),)))
+    inj.wrap_pool(pool)
+    reqs = [pool.submit(f"prompt number {i}", max_new_tokens=4)
+            for i in range(4)]
+    pool.run_until_done()
+    assert all(r.done for r in reqs)
+    assert all(len(r.output_ids) == 4 for r in reqs)
+    assert pool.health == ["healthy", "dead"]
+    assert pool.pool_stats["deaths"] == 1
+    assert pool.pool_stats["failovers"] >= 1
+    assert inj.stats["replica_crashes"] == 1
+    # run_until on a failed-over request keeps working (re-resolves owner)
+    late = pool.submit("one more prompt", max_new_tokens=3)
+    assert pool.run_until(late).done
+
+
+def test_pool_straggler_suspect_and_hedge(model_zoo):
+    """A replica that stops progressing while holding work turns suspect
+    after N passes and its work is hedged to the healthy replica."""
+    pool = _pool(model_zoo, suspect_after=2)
+    inj = FaultInjector(FaultPlan(seed=CHAOS_SEED,
+                                  slow_replica=((0, 10 ** 6),)))
+    inj.wrap_pool(pool)
+    reqs = [pool.submit(f"prompt number {i}", max_new_tokens=4)
+            for i in range(4)]
+    pool.run_until_done()
+    assert all(r.done for r in reqs)
+    assert pool.pool_stats["suspects"] >= 1
+    assert pool.pool_stats["hedges"] >= 1
+    assert pool.health[0] == "suspect"            # never progressed
+
+
+def _serve(model_zoo, queries, *, faults=None, retry=None, replicas=2):
+    from repro.serving.engine import JAXExecutor, ServingEngine
+    from repro.serving.runtime import ServingRuntime
+    cfg, params = model_zoo("qwen2-1.5b")
+    wm = WorldModel()
+    edge = JAXExecutor(ServingEngine(cfg, params, **PLAN_KW), wm,
+                       cloud=False)
+    cloud = JAXExecutor(_pool(model_zoo, replicas=replicas), wm,
+                        cloud=True, price_out=3.2e-5)
+    rt = ServingRuntime(edge, cloud, StaticPolicy(1), max_inflight=6,
+                        pump=True, faults=faults, retry=retry)
+    for q, dag in queries:
+        rt.submit(q, dag)
+    return rt.serve()
+
+
+def test_pumped_chaos_acceptance_12_queries(model_zoo):
+    """Acceptance: 10% injected cloud submit failures + one replica crash
+    mid-run — the 12-query fleet completes every query with zero raised
+    exceptions and reports per-subtask retries/degraded plus pool
+    failover stats."""
+    queries = [_flat_query(f"q{i:02d}") for i in range(12)]
+    rep = _serve(model_zoo, queries,
+                 faults=FaultPlan(seed=CHAOS_SEED, submit_fail_rate=0.10,
+                                  crash_replica=((1, 8),)),
+                 retry=RetryPolicy(max_retries=2, timeout_s=30.0))
+    assert rep.n == 12
+    for r in rep.results:
+        assert r is not None and len(r.results) == r.dag.n
+    assert rep.stats["cloud_deaths"] == 1
+    assert rep.stats["cloud_replica_health"] == ["healthy", "dead"]
+    assert rep.stats["injected"]["replica_crashes"] == 1
+    if rep.stats["injected"]["submit_faults"]:
+        assert rep.stats["retries"] + rep.stats["degraded"] > 0
+        assert sum(r.n_retries for r in rep.results) > 0
+
+
+def test_pumped_fault_free_token_identical(model_zoo):
+    """Recovery armed + zero-rate plan vs plain pumped serve: identical
+    tokens for every subtask (the fault path is provably inert)."""
+    queries = [_flat_query(f"q{i}") for i in range(4)]
+    rep_a = _serve(model_zoo, queries)
+    rep_b = _serve(model_zoo, queries, faults=FaultPlan(seed=CHAOS_SEED),
+                   retry=RetryPolicy(max_retries=2, timeout_s=None))
+    key = lambda rep: sorted((r.qid, s.sid, s.answer)
+                             for r in rep.results
+                             for s in r.results.values())
+    assert key(rep_a) == key(rep_b)
+    assert rep_b.stats["retries"] == rep_b.stats["degraded"] == 0
+    assert rep_b.stats["cloud_deaths"] == 0
+
+
+def test_pumped_stall_times_out_and_degrades(model_zoo):
+    """A held (stalled) cloud completion trips the in-flight deadline:
+    the attempt is cancelled (KV slot freed), its sunk tokens charged,
+    and the subtask degrades to the edge."""
+    _serve(model_zoo, [_flat_query("warm", n=1)])   # compile outside timing
+    queries = [_flat_query(f"q{i}", n=1) for i in range(2)]
+    rep = _serve(model_zoo, queries,
+                 faults=FaultPlan(seed=CHAOS_SEED, stall_rate=1.0,
+                                  stall_s=60.0),
+                 retry=RetryPolicy(max_retries=0, timeout_s=2.0))
+    assert rep.n == 2
+    assert rep.stats["timeouts"] >= 2
+    assert rep.stats["degraded"] == 2
+    for r in rep.results:
+        assert all(s.degraded for s in r.results.values())
+        assert all(v == 0 for v in r.offload.values())
