@@ -10,9 +10,13 @@ Rows come in three classes; ``--only`` selects analytic vs everything
 measured on a wall clock:
 
 * **analytic** — simulated-clock scheduler/runtime rows (``sequential``,
-  ``concurrent-*``). Deterministic up to scheduler tie-breaks, so their
-  qps diff GATES CI (a drop beyond ``--tolerance``, default 20%, fails
-  the job on any machine).
+  ``concurrent-*``) plus the ``trace-gen`` arrival-generator fidelity
+  row. Deterministic up to scheduler tie-breaks, so their metric diff
+  GATES CI (a drop beyond ``--tolerance``, default 20%, fails the job
+  on any machine). On top of the baseline diff, the current run's
+  ``trace-gen`` row must show the Poisson generator's measured mean RPS
+  within 5% of its target — a miss there is generator breakage, not
+  noise.
 * **microbench** — ``prefill-*`` / ``decode-*`` kernel rows. Single-op
   timings are far less noisy than full fleet runs, so these GATE too,
   at the looser ``--real-tolerance`` (default 60%). On top of the
@@ -24,10 +28,11 @@ measured on a wall clock:
   ran them. Too noisy to gate: a regression prints a WARNING in the log
   without failing the job, so the step no longer needs
   ``continue-on-error``. The chaos rows (``real-faultfree`` /
-  ``real-degraded`` from the fault-injection overhead section) ride this
-  class by construction — their prefix makes them warn-only, while the
-  section's own in-run invariant (every query completes under faults)
-  still hard-fails inside ``serve_throughput`` itself.
+  ``real-degraded``) and the open-loop elastic row (``real-openloop``)
+  ride this class by construction — their prefix makes them warn-only,
+  while each section's own in-run invariants (every query completes
+  under faults; scale-to-zero + poke-to-warm fire during the trace
+  replay) still hard-fail inside ``serve_throughput`` itself.
 
 ``PYTHONPATH=src python -m benchmarks.check_bench [--current PATH]
 [--baseline PATH] [--only analytic|wallclock] [--tolerance 0.2]
@@ -53,7 +58,8 @@ def _load(path):
 
 def _metric(row):
     """(name, value) of the row's throughput metric, or (None, None)."""
-    for name in ("qps", "prefill_tok_per_s", "decode_tok_per_s"):
+    for name in ("qps", "prefill_tok_per_s", "decode_tok_per_s",
+                 "measured_rps"):
         v = row.get(name)
         if isinstance(v, (int, float)) and v > 0:
             return name, float(v)
@@ -149,6 +155,23 @@ def check(current: str, baseline: str, tolerance: float,
                   f"than decode-ref {dec[1]:.3f} ms/call")
             warnings.append(("decode-pallas>ref", "ms_per_call",
                              dec[1], dec[0], (dec[0] - dec[1]) / dec[1]))
+
+    # cross-row gate inside the CURRENT run, analytic side: the Poisson
+    # arrival generator must hit its target rate within 5% — the row is
+    # deterministic host arithmetic, so a miss is breakage, not noise
+    if only != "wallclock":
+        tg = selected.get("trace-gen")
+        if tg is not None:
+            t, m = tg.get("target_rps"), tg.get("measured_rps")
+            if isinstance(t, (int, float)) and t > 0 \
+                    and isinstance(m, (int, float)):
+                err = abs(m - t) / t
+                verdict = "OK" if err <= 0.05 else "FAIL"
+                print(f"\ntrace generator vs target: {m:.3f} rps measured, "
+                      f"{t:.3f} rps target ({err:.1%}, {verdict})")
+                if err > 0.05:
+                    regressions.append(("trace-gen!=target", "measured_rps",
+                                        t, m, err))
 
     # a gate that compares nothing gates nothing: renamed/dropped modes
     # must fail loudly instead of silently passing the check

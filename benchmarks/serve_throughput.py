@@ -35,6 +35,16 @@ armed, reporting the wall-clock overhead of absorbing the faults plus
 the recovery counters (retries/timeouts/degraded/failovers/deaths).
 Every query must still complete or the bench itself fails.
 
+Open-loop section: a fixed seeded bursty arrival trace (base load, a
+burst, a long zero-traffic gap, one post-gap arrival; wall-compressed)
+replays with timed admission against an elastic 0→R cloud pool
+(``real-openloop`` row — TTFT/queue-wait percentiles at the measured
+offered RPS plus the autoscale event counters). The section hard-fails
+unless every query completes, the pool scales to zero during the gap,
+and the post-gap arrival pokes it back to warm. A separate analytic
+``trace-gen`` row records the Poisson generator's measured mean RPS
+against its target (``check_bench`` gates it within 5%).
+
 Two final sections microbench the serving attention ops themselves —
 jnp reference vs Pallas kernel for ragged chunked prefill
 (``prefill-ref`` / ``prefill-pallas`` rows) and for batched decode
@@ -62,7 +72,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks import common as C
 from repro.core.hybridflow import HybridFlowPolicy
-from repro.serving.runtime import ServingRuntime
+from repro.serving.runtime import ServingConfig, ServingRuntime
 
 INFLIGHT_LEVELS = (2, 4, 8, 16)
 MIN_REAL_SPEEDUP = 1.3
@@ -71,7 +81,7 @@ MIN_REAL_SPEEDUP = 1.3
 def _runtime(pipe, router, **kw):
     policy = HybridFlowPolicy(router, wm=pipe.wm)
     return ServingRuntime(pipe.edge, pipe.cloud, policy,
-                          planner=pipe.planner, **kw)
+                          planner=pipe.planner, config=ServingConfig(**kw))
 
 
 def run(n_queries=None, bench="gpqa"):
@@ -81,7 +91,7 @@ def run(n_queries=None, bench="gpqa"):
     qs = C.queries(bench, n)
 
     rows = []
-    seq = _runtime(pipe, router).serve_sequential(qs)
+    seq = _runtime(pipe, router).serve(qs, mode="sequential")
     rows.append(["sequential", 1, n, seq.makespan, seq.qps,
                  seq.p50_latency, seq.p99_latency, seq.accuracy,
                  seq.api_cost])
@@ -138,7 +148,8 @@ def run_real(n_queries=6, bench="gpqa", *, arch="qwen2-1.5b",
                             price_out=3.2e-5)
         rt = ServingRuntime(edge, cloud, _HashRoutePolicy(),
                             planner=SyntheticPlanner(),
-                            max_inflight=max_inflight, pump=pump)
+                            config=ServingConfig(max_inflight=max_inflight,
+                                                 pump=pump))
         rep = rt.serve(qs)
         return rep, edge_e, cloud_e
 
@@ -221,7 +232,8 @@ def run_pool(n_queries=12, bench="gpqa", *, arch="qwen2-1.5b", replicas=2,
         cloud = JAXExecutor(cloud_eng, wm, cloud=True, price_out=3.2e-5)
         rt = ServingRuntime(edge, cloud, _CloudBoundPolicy(),
                             planner=SyntheticPlanner(),
-                            max_inflight=max_inflight, pump=True)
+                            config=ServingConfig(max_inflight=max_inflight,
+                                                 pump=True))
         rep = rt.serve(qs)
         return rep, cloud_eng
 
@@ -297,8 +309,9 @@ def run_degraded(n_queries=12, bench="gpqa", *, arch="qwen2-1.5b",
         cloud = JAXExecutor(pool, wm, cloud=True, price_out=3.2e-5)
         rt = ServingRuntime(edge, cloud, _CloudBoundPolicy(),
                             planner=SyntheticPlanner(),
-                            max_inflight=n_queries, pump=True,
-                            faults=faults, retry=retry)
+                            config=ServingConfig(max_inflight=n_queries,
+                                                 pump=True, faults=faults,
+                                                 retry=retry))
         return rt.serve(qs)
 
     serve(None, None)                     # jit compiles outside both timings
@@ -330,6 +343,104 @@ def run_degraded(n_queries=12, bench="gpqa", *, arch="qwen2-1.5b",
     rows[1]["overhead_pct"] = 100.0 * (
         rows[1]["wall_s"] / max(rows[0]["wall_s"], 1e-9) - 1.0)
     return rows, rows[1]["overhead_pct"]
+
+
+def run_trace_gen(*, rps=4.0, duration=600.0, seed=7):
+    """Analytic trace-generator fidelity row (gates in CI): a seeded
+    Poisson trace at a target RPS must measure within 5% of it over a
+    long horizon, and the same seed must replay identically. Purely
+    host-side arithmetic — deterministic on any machine."""
+    from repro.serving.traffic import Trace
+
+    tr = Trace.poisson(rps, duration, seed=seed)
+    replay = Trace.poisson(rps, duration, seed=seed)
+    assert tr.arrivals == replay.arrivals, \
+        "trace generator is not deterministic under a fixed seed"
+    return [{"mode": "trace-gen", "n": tr.n, "duration": duration,
+             "seed": seed, "target_rps": rps, "measured_rps": tr.mean_rps,
+             "rps_err_pct": 100.0 * abs(tr.mean_rps - rps) / rps}]
+
+
+# the open-loop section's fixed trace: steady base load, a burst, a 20s
+# zero-traffic gap, one post-gap arrival (seed 0 guarantees it) — then
+# wall-compressed so the whole replay fits a bench run
+_OPENLOOP_TRACE = dict(base_rps=0.12, duration=60.0, burst_rps=0.8,
+                       burst_at=15.0, burst_s=5.0, gap_at=28.0, gap_s=20.0,
+                       seed=0)
+
+
+def run_openloop(bench="gpqa", *, arch="qwen2-1.5b", replicas=4,
+                 scale=1 / 6):
+    """Open-loop elastic serving: replay the fixed seeded bursty trace
+    with timed admission against an elastic 0→``replicas`` cloud pool
+    (scale-to-zero + modeled cold start armed). The row reports TTFT /
+    queue-wait percentiles at the measured offered RPS plus the
+    autoscale counters; the section itself hard-fails unless every query
+    completes, the pool scales to zero during the gap, and the post-gap
+    arrival pokes it back to warm."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.core.planner import SyntheticPlanner
+    from repro.data.tasks import WorldModel, gen_benchmark
+    from repro.models import model as M
+    from repro.serving import (AutoscalePolicy, ColdStartModel, EnginePool,
+                               Trace)
+    from repro.serving.engine import JAXExecutor, ServingEngine
+
+    cfg = get_config(arch).reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    wm = WorldModel()
+
+    def build(autoscale):
+        edge_e = ServingEngine(cfg, params, batch_slots=2, max_len=160,
+                               prefill_chunk=64)
+        pool = EnginePool.replicate(cfg, params, replicas=replicas,
+                                    batch_slots=2, max_len=160,
+                                    prefill_chunk=64)
+        edge = JAXExecutor(edge_e, wm, cloud=False, concurrency=1)
+        cloud = JAXExecutor(pool, wm, cloud=True, price_out=3.2e-5)
+        return ServingRuntime(edge, cloud, _CloudBoundPolicy(),
+                              planner=SyntheticPlanner(),
+                              config=ServingConfig(max_inflight=None,
+                                                   pump=True,
+                                                   autoscale=autoscale))
+
+    build(None).serve(gen_benchmark(bench, 2))   # pay jit compiles
+
+    trace = Trace.bursty(**_OPENLOOP_TRACE).scaled(scale)
+    auto = AutoscalePolicy(min_replicas=0, scale_up_at=0.8,
+                           scale_down_at=0.3, idle_to_zero_s=0.6,
+                           cold_start=ColdStartModel(0.1, 0.15, 0.05))
+    rep = build(auto).serve_trace(trace, gen_benchmark(bench, trace.n))
+    a = rep.trace["autoscale"]
+    assert all(r is not None and len(r.results) == r.dag.n
+               for r in rep.results), "open loop dropped a query"
+    assert a["scale_to_zero"] >= 1, \
+        f"pool never scaled to zero during the gap: {a['events']}"
+    assert a["pokes"] >= 2, \
+        f"post-gap arrival never poked the pool warm: {a['events']}"
+    return [{
+        "mode": "real-openloop",
+        "queries": trace.n,
+        "trace": trace.label,
+        "trace_seed": trace.seed,
+        "offered_rps": rep.trace["offered_rps"],
+        "qps": rep.n / rep.wall_s if rep.wall_s > 0 else 0.0,
+        "p50": rep.p50_latency,
+        "p99": rep.p99_latency,
+        "ttft_p50": rep.p50_ttft,
+        "ttft_p99": rep.p99_ttft,
+        "queue_p99": rep.queue_wait_percentile(99.0),
+        "wall_s": rep.wall_s,
+        "cloud_replicas": replicas,
+        "scale_ups": a["scale_ups"],
+        "scale_downs": a["scale_downs"],
+        "scale_to_zero": a["scale_to_zero"],
+        "pokes": a["pokes"],
+        "promotions": a["promotions"],
+    }]
 
 
 def run_prefill_microbench(*, G=4, S=64, W=256, H=4, KV=2, hd=64, iters=3):
@@ -443,6 +554,9 @@ def main():
                     help="chaos-overhead section query count: clean vs "
                          "10%% injected cloud faults + a replica crash "
                          "(0 disables)")
+    ap.add_argument("--openloop-replicas", type=int, default=4,
+                    help="elastic cloud pool ceiling for the open-loop "
+                         "trace-replay section (0 disables)")
     ap.add_argument("--benchmark", default="gpqa")
     ap.add_argument("--json", default="BENCH_serve.json",
                     help="machine-readable output path ('' disables)")
@@ -464,6 +578,14 @@ def main():
     json_rows = [dict(zip(["mode", "max_inflight", "queries", "makespan_s",
                            "qps", "p50", "p99", "accuracy", "api_usd"], r),
                       prefill_tokens=None, peak_active=None) for r in rows]
+
+    tg_rows = run_trace_gen()
+    C.print_csv("serve_trace_gen", list(tg_rows[0].keys()),
+                [list(r.values()) for r in tg_rows])
+    print(f"\ntrace generator: {tg_rows[0]['measured_rps']:.3f} rps "
+          f"measured vs {tg_rows[0]['target_rps']:.3f} target "
+          f"({tg_rows[0]['rps_err_pct']:.2f}% err; CI gates at 5%)")
+    json_rows += tg_rows
 
     if args.real_queries > 0:
         real_rows, speedup = run_real(args.real_queries, args.benchmark)
@@ -507,6 +629,19 @@ def main():
               f"{deg_rows[1]['failovers']} failovers) — all "
               f"{deg_rows[1]['queries']} queries completed")
         json_rows += deg_rows
+
+    if args.openloop_replicas > 0:
+        ol_rows = run_openloop(args.benchmark,
+                               replicas=args.openloop_replicas)
+        C.print_csv("serve_openloop", list(ol_rows[0].keys()),
+                    [list(r.values()) for r in ol_rows])
+        r = ol_rows[0]
+        print(f"\nopen loop: {r['queries']} queries at "
+              f"{r['offered_rps']:.2f} rps offered — ttft p50 "
+              f"{r['ttft_p50']:.2f}s p99 {r['ttft_p99']:.2f}s | autoscale "
+              f"ups={r['scale_ups']} downs={r['scale_downs']} "
+              f"to_zero={r['scale_to_zero']} pokes={r['pokes']}")
+        json_rows += ol_rows
 
     if args.prefill_iters > 0:
         pf_rows = run_prefill_microbench(iters=args.prefill_iters)

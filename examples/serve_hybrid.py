@@ -41,10 +41,10 @@ requests into single calls.
 
 Programmatic use mirrors the CLI::
 
-    from repro.serving.runtime import ServingRuntime
+    from repro.serving import ServingConfig, ServingRuntime
     rt = ServingRuntime(edge, cloud, policy, planner=planner,
-                        max_inflight=8)      # pump=None: auto-detect
-    report = rt.serve(queries)       # or rt.serve_sequential(queries)
+                        config=ServingConfig(max_inflight=8))
+    report = rt.serve(queries)   # or rt.serve(queries, mode="sequential")
     print(report.summary())
 """
 import argparse
@@ -63,8 +63,8 @@ from repro.core.planner import SyntheticPlanner
 from repro.core.profiler import train_default_router
 from repro.data.tasks import gen_benchmark, WorldModel
 from repro.models import model as M
+from repro.serving import ServingConfig, ServingRuntime
 from repro.serving.engine import ServingEngine, JAXExecutor
-from repro.serving.runtime import ServingRuntime
 
 
 def build_engine(arch: str, scale: int, seed: int,
@@ -106,16 +106,17 @@ def main():
 
     router, _ = train_default_router(n_queries=100, epochs=60)
     policy = HybridFlowPolicy(router, wm=wm)
+    config = ServingConfig(max_inflight=args.max_inflight,
+                           global_k_max=args.global_k_max,
+                           pump=False if args.no_pump else None,
+                           replicas=args.cloud_replicas)
     runtime = ServingRuntime(edge, cloud, policy, planner=SyntheticPlanner(),
-                             max_inflight=args.max_inflight,
-                             global_k_max=args.global_k_max,
-                             pump=False if args.no_pump else None,
-                             replicas=args.cloud_replicas)
+                             config=config)
 
     qs = gen_benchmark("gpqa", args.queries)
     t0 = time.time()
-    report = (runtime.serve_sequential(qs) if args.sequential
-              else runtime.serve(qs))
+    report = runtime.serve(
+        qs, mode="sequential" if args.sequential else "fleet")
     for q, res in zip(qs, report.results):
         routed = "".join("C" if res.offload[s] else "e"
                          for s in sorted(res.offload))

@@ -128,13 +128,18 @@ class SchedulerContext:
 class QueryResult:
     qid: str
     final_correct: bool
-    latency: float             # makespan (s)
+    latency: float             # makespan (s), admission -> final subtask
     api_cost: float
     results: Dict[int, SubtaskResult]
     offload: Dict[int, int]
     tau_trace: List[float]
     dag: PlanDAG
     plan_status: str = "valid"
+    # open-loop (timed-admission) metrics; all zero for closed-loop runs
+    # where every query arrives at t=0 and admission is immediate
+    arrival: float = 0.0       # fleet-clock arrival time
+    queue_wait: float = 0.0    # arrival -> admission
+    ttft: float = 0.0          # arrival -> first completed subtask
 
     @property
     def offload_rate(self) -> float:
@@ -236,6 +241,8 @@ class _QueryState:
     done_sids: set = field(default_factory=set)
     admitted: bool = False
     admit_clock: float = 0.0
+    arrival: float = 0.0                # earliest admission time (open loop)
+    first_done: Optional[float] = None  # fleet clock of first completion
     result: Optional[QueryResult] = None
     index: int = -1
 
@@ -250,7 +257,11 @@ class _LoopState:
     def __init__(self, fleet: "FleetScheduler"):
         self.clock = 0.0
         self.busy = {id(fleet.edge): 0, id(fleet.cloud): 0}
-        self.backlog = [qs for qs in fleet._states if qs.result is None]
+        # arrival order, submit order within a tie — identical to plain
+        # submit order when every arrival is 0 (the closed-loop case)
+        self.backlog = sorted(
+            (qs for qs in fleet._states if qs.result is None),
+            key=lambda qs: (qs.arrival, qs.index))
         self.active: List[_QueryState] = []    # admitted, unfinished
 
 
@@ -327,14 +338,25 @@ class FleetScheduler:
     # ---- admission ----------------------------------------------------
     def submit(self, query: Query, dag: PlanDAG, policy: RoutingPolicy, *,
                plan_status: str = "valid",
-               schedule_out: Optional[Schedule] = None) -> int:
-        """Enqueue one planned query; returns its fleet index."""
+               schedule_out: Optional[Schedule] = None,
+               arrival: float = 0.0) -> int:
+        """Enqueue one planned query; returns its fleet index.
+
+        ``arrival`` (fleet-clock seconds, default 0) is the earliest time
+        the query may be admitted — open-loop traces submit every query
+        up front with its arrival time and the loop admits each one when
+        the clock reaches it.  ``arrival=0`` for every query is the
+        closed-loop case and leaves both drivers' behavior untouched.
+        """
         if dag.n == 0:
             raise ValueError("scheduler requires a non-empty DAG")
+        if arrival < 0:
+            raise ValueError("arrival must be >= 0")
         order = topological_order(dag)
         if order is None:
             raise ValueError("scheduler requires a DAG (run repair first)")
         qs = _QueryState(query, dag, policy, plan_status, schedule_out, order)
+        qs.arrival = float(arrival)
         # dangling deps (sid not in the DAG) are ignored, matching
         # topological_order/children — otherwise the node never becomes
         # ready and the query stalls holding an admission slot forever
@@ -370,6 +392,8 @@ class FleetScheduler:
         if disp is not None:
             res.retries = disp.retries
             res.degraded = disp.degraded
+        if qs.first_done is None:
+            qs.first_done = end    # TTFT anchor: first visible output
         qs.done_sids.add(node.sid)
         qs.ctx.k_used += res.api_cost
         qs.ctx.l_used += res.latency
@@ -443,6 +467,8 @@ class FleetScheduler:
         def admit_next():
             while st.backlog and (self.max_inflight is None
                                   or len(st.active) < self.max_inflight):
+                if st.backlog[0].arrival > st.clock:
+                    break          # open loop: next query hasn't arrived yet
                 qs = st.backlog.pop(0)
                 qs.admitted = True
                 qs.admit_clock = st.clock
@@ -589,11 +615,24 @@ class FleetScheduler:
 
         admit_next, route_ready, dispatch_all = self._make_loop(
             st, dispatch_action, fail_action)
+        # open loop: each future arrival is a heap event; clock 0 arrivals
+        # go through the legacy immediate admission below, so closed-loop
+        # runs see an identical event sequence
+        for qs_ in st.backlog:
+            if qs_.arrival > 0.0:
+                heapq.heappush(running, (qs_.arrival, next(counter),
+                                         "arrive", qs_.index, None,
+                                         qs_.arrival, None))
         admit_next()
         dispatch_all()
         while running:
             t, _, kind, qi, disp, start, res = heapq.heappop(running)
             qs = self._states[qi]
+            if kind == "arrive":
+                st.clock = max(st.clock, t)
+                admit_next()
+                dispatch_all()
+                continue
             if kind == "retry":
                 st.clock = t
                 disp.not_before = 0.0
@@ -661,13 +700,33 @@ class FleetScheduler:
 
         admit_next, route_ready, dispatch_all = self._make_loop(
             st, dispatch_action, fail_action, live_saturation=True)
+        # timed admission is open-loop only; with every arrival at 0 the
+        # loop below takes the exact legacy control flow (no admission
+        # checks or gap naps on the hot path)
+        timed = any(qs.arrival > 0.0 for qs in st.backlog)
         admit_next()
         dispatch_all()
-        while inflight or any(qs.waiting for qs in st.active):
+        while inflight or any(qs.waiting for qs in st.active) \
+                or (timed and st.backlog):
             stepped = False
             for ex in pools:
                 stepped |= bool(ex.pump())
             st.clock = time.perf_counter() - t0
+            if timed and st.backlog:
+                admit_next()
+                if dispatch_all():
+                    # freshly arrived work was placed; poll it next pass
+                    idle_since = st.clock
+                    continue
+                if not inflight and not any(qs.waiting
+                                            for qs in st.active):
+                    # traffic gap: everything admitted has drained and the
+                    # next arrival is in the future — keep pumping pools
+                    # (autoscalers tick on wall-clock) and nap briefly
+                    time.sleep(min(max(st.backlog[0].arrival - st.clock,
+                                       0.0), 0.002))
+                    idle_since = st.clock
+                    continue
             fault_fired = False
             if timeout_s is not None:
                 for row in [r_ for r_ in inflight
@@ -753,11 +812,15 @@ class FleetScheduler:
 
     def _finalize(self, qs: _QueryState, clock: float) -> None:
         gen = _generate_sid(qs.dag, qs.order)
+        first = qs.first_done if qs.first_done is not None else clock
         qs.result = QueryResult(
             qs.query.qid, qs.results[gen].correct, clock - qs.admit_clock,
             sum(x.api_cost for x in qs.results.values()),
             qs.results, qs.offload, list(qs.ctx.tau_trace), qs.dag,
-            qs.plan_status)
+            qs.plan_status,
+            arrival=qs.arrival,
+            queue_wait=max(qs.admit_clock - qs.arrival, 0.0),
+            ttft=max(first - qs.arrival, 0.0))
 
 
 def run_query(query: Query, dag: PlanDAG, policy: RoutingPolicy,

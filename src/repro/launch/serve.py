@@ -13,6 +13,17 @@ slots); ``--no-pump`` forces the old synchronous per-subtask dispatch;
 ``--sequential`` restores the seed's one-query-at-a-time loop;
 ``--global-k-max`` caps fleet-wide API spend.
 
+Open loop: ``--rps R`` generates a seeded Poisson arrival trace and
+replays it with timed admission (``--trace FILE`` replays a recorded
+``Trace`` JSON instead); the report then carries TTFT / queue-wait
+percentiles at the measured offered RPS. ``--autoscale`` makes the
+cloud pool elastic — occupancy-driven grow/shrink with a modeled cold
+start, scale-to-zero on traffic gaps, poke-to-warm on the next
+arrival. Example::
+
+  PYTHONPATH=src python -m repro.launch.serve --rps 0.8 --duration 15 \
+      --cloud-replicas 3 --autoscale
+
 ``--faults SPEC`` drives a chaos run: deterministic seeded fault
 injection (cloud submit failures, stalls, replica crash/stragglers —
 see ``serving.faults.FaultPlan.parse``) absorbed by scheduler-side
@@ -43,15 +54,17 @@ from repro.core.profiler import train_default_router
 from repro.core.exposure import mean_exposure
 from repro.data.tasks import gen_benchmark, WorldModel
 from repro.models import model as M
+from repro.serving import (AutoscalePolicy, ServingConfig, ServingRuntime,
+                           Trace)
 from repro.serving.engine import ServingEngine, JAXExecutor
-from repro.serving.runtime import ServingRuntime
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--edge-arch", default=PAPER_EDGE_ARCH, choices=ARCH_IDS)
     ap.add_argument("--cloud-arch", default=PAPER_CLOUD_ARCH, choices=ARCH_IDS)
-    ap.add_argument("--queries", type=int, default=6)
+    ap.add_argument("--queries", type=int, default=6,
+                    help="closed-loop batch size (open loop: trace decides)")
     ap.add_argument("--benchmark", default="gpqa")
     ap.add_argument("--tau0", type=float, default=0.35)
     ap.add_argument("--k-max", type=float, default=0.04)
@@ -73,19 +86,56 @@ def main():
                          "co-resident decodes)")
     ap.add_argument("--calibrate", action="store_true",
                     help="enable the LinUCB calibration head")
-    ap.add_argument("--faults", default=None, metavar="SPEC",
-                    help="seeded chaos spec, e.g. "
-                         "'submit_fail=0.1,stall=0.05@0.3,crash=1@20,"
-                         "slow=0:4,seed=3' (see serving.faults)")
-    ap.add_argument("--max-retries", type=int, default=2,
-                    help="recovery: attempts per side before a cloud "
-                         "subtask degrades to the edge")
-    ap.add_argument("--timeout", type=float, default=None,
-                    help="recovery: per-attempt deadline in seconds")
-    ap.add_argument("--backoff-base", type=float, default=0.05,
-                    help="recovery: base of the capped exponential "
-                         "retry backoff")
+
+    traffic = ap.add_argument_group(
+        "open-loop traffic", "timed admission against an arrival trace; "
+        "the report adds TTFT / queue-wait percentiles at measured RPS")
+    traffic.add_argument("--rps", type=float, default=None,
+                         help="offered load: seeded Poisson arrivals at "
+                              "this rate (queries/s)")
+    traffic.add_argument("--duration", type=float, default=15.0,
+                         help="trace horizon in seconds (with --rps)")
+    traffic.add_argument("--trace", default=None, metavar="PATH",
+                         help="replay a recorded Trace JSON "
+                              "(overrides --rps)")
+    traffic.add_argument("--trace-seed", type=int, default=0,
+                         help="arrival-sampling seed (with --rps)")
+
+    elastic = ap.add_argument_group(
+        "elastic cloud pool", "occupancy-driven autoscaling of the cloud "
+        "EnginePool (use with --cloud-replicas R)")
+    elastic.add_argument("--autoscale", action="store_true",
+                         help="grow/shrink replicas from live occupancy "
+                              "with a modeled cold start; scale-to-zero "
+                              "on gaps, poke-to-warm on the next arrival")
+    elastic.add_argument("--min-replicas", type=int, default=0,
+                         help="floor kept warm (0 enables scale-to-zero)")
+    elastic.add_argument("--idle-to-zero", type=float, default=1.0,
+                         help="idle seconds before scaling to zero")
+
+    chaos = ap.add_argument_group(
+        "chaos / recovery", "seeded fault injection and the retry policy "
+        "that absorbs it")
+    chaos.add_argument("--faults", default=None, metavar="SPEC",
+                       help="seeded chaos spec, e.g. "
+                            "'submit_fail=0.1,stall=0.05@0.3,crash=1@20,"
+                            "slow=0:4,seed=3' (see serving.faults)")
+    chaos.add_argument("--max-retries", type=int, default=2,
+                       help="attempts per side before a cloud subtask "
+                            "degrades to the edge")
+    chaos.add_argument("--timeout", type=float, default=None,
+                       help="per-attempt deadline in seconds")
+    chaos.add_argument("--backoff-base", type=float, default=0.05,
+                       help="base of the capped exponential retry backoff")
     args = ap.parse_args()
+
+    trace = None
+    if args.trace is not None:
+        trace = Trace.from_json(args.trace)
+    elif args.rps is not None:
+        trace = Trace.poisson(args.rps, args.duration, seed=args.trace_seed)
+    if trace is not None and args.sequential:
+        ap.error("--sequential is closed-loop; drop --rps/--trace")
 
     wm = WorldModel()
     edge_cfg = get_config(args.edge_arch).reduced()
@@ -117,19 +167,32 @@ def main():
         retry = RetryPolicy(max_retries=args.max_retries,
                             backoff_base=args.backoff_base,
                             timeout_s=args.timeout)
+    autoscale = None
+    if args.autoscale:
+        autoscale = AutoscalePolicy(min_replicas=args.min_replicas,
+                                    idle_to_zero_s=args.idle_to_zero)
+    config = ServingConfig(max_inflight=args.max_inflight,
+                           global_k_max=args.global_k_max,
+                           pump=False if args.no_pump else None,
+                           replicas=args.cloud_replicas,
+                           autoscale=autoscale,
+                           retry=retry, faults=args.faults)
     runtime = ServingRuntime(edge, cloud, policy, planner=SyntheticPlanner(),
-                             max_inflight=args.max_inflight,
-                             global_k_max=args.global_k_max,
-                             pump=False if args.no_pump else None,
-                             replicas=args.cloud_replicas,
-                             retry=retry, faults=args.faults)
+                             config=config)
 
-    qs = gen_benchmark(args.benchmark, args.queries)
+    n_queries = trace.n if trace is not None else args.queries
+    qs = gen_benchmark(args.benchmark, n_queries)
     t0 = time.time()
-    if args.sequential:
-        report = runtime.serve_sequential(qs)
+    if trace is not None:
+        print(f"open loop: {trace.describe()}")
+        report = runtime.serve_trace(trace, qs)
+        mode = f"open-loop(max_inflight={args.max_inflight})"
     else:
-        report = runtime.serve(qs)
+        report = runtime.serve(
+            qs, mode="sequential" if args.sequential else "fleet")
+        mode = "sequential" if args.sequential else \
+            (f"{'sync' if args.no_pump else 'pumped'}"
+             f"(max_inflight={args.max_inflight})")
     for q, res in zip(qs, report.results):
         route = "".join("C" if res.offload[s] else "e"
                         for s in sorted(res.offload))
@@ -137,14 +200,17 @@ def main():
               f"correct={res.final_correct} wall={res.latency:5.2f}s "
               f"api=${res.api_cost:.4f}")
     _, nbar = mean_exposure(report.results)
-    mode = "sequential" if args.sequential else \
-        (f"{'sync' if args.no_pump else 'pumped'}"
-         f"(max_inflight={args.max_inflight})")
     print(f"\n[{mode}] {report.summary()} | exposure Ē={nbar:.2f} | "
           f"real {time.time()-t0:.1f}s")
     if report.stats.get("forced_edge"):
         print(f"global budget forced {report.stats['forced_edge']} "
               f"subtasks onto the edge")
+    if trace is not None and "autoscale" in (report.trace or {}):
+        a = report.trace["autoscale"]
+        print(f"autoscale: ups={a['scale_ups']} downs={a['scale_downs']} "
+              f"to_zero={a['scale_to_zero']} pokes={a['pokes']}")
+        for t, action, i in a["events"]:
+            print(f"  t={t:7.3f}s {action:8s} replica {i}")
     if args.faults is not None:
         s = report.stats
         print(f"chaos: injected={s.get('injected')} | recovery: "
@@ -163,7 +229,9 @@ def main():
     print(f"edge: {edge_engine.stats} | cloud: {cloud_eng.stats}")
     if hasattr(cloud_eng, "occupancy"):
         for o in cloud_eng.occupancy():
-            print(f"  cloud replica {o['replica']}: requests={o['requests']} "
+            life = f" {o['lifecycle']}" if "lifecycle" in o else ""
+            print(f"  cloud replica {o['replica']}:{life} "
+                  f"requests={o['requests']} "
                   f"peak_active={o['peak_active']}/{o['slots']} "
                   f"slot_reuses={o['slot_reuses']}")
 

@@ -1,6 +1,56 @@
-"""Real-model serving: slot-batched engines, replicated engine pools,
-the Executor adapter, the multi-query fleet runtime, and deterministic
-fault injection.
+"""Real-model serving: slot-batched engines, replicated (and elastic)
+engine pools, the Executor adapter, the multi-query fleet runtime,
+open-loop traffic traces, and deterministic fault injection.
+
+Surface overview
+----------------
+* :class:`ServingRuntime` — admit → plan → fleet-execute. Every knob
+  lives on the frozen :class:`ServingConfig` value object
+  (``ServingRuntime(edge, cloud, policy, planner=..., config=...)``);
+  the pre-redesign flat kwargs (``max_inflight=``, ``pump=``,
+  ``replicas=``, ``retry=``, ``faults=``, …) are accepted for one more
+  release through a deprecation shim that maps them into a config and
+  warns. One dispatcher serves every mode:
+  ``serve(queries)`` (closed loop), ``serve(queries, mode="sequential")``
+  and ``serve(queries, arrivals=trace)`` / ``serve_trace(trace)`` (open
+  loop with timed admission) all return the same
+  :class:`RuntimeReport` shape.
+* :class:`~repro.serving.traffic.Trace` /
+  :class:`~repro.serving.traffic.Phase` — seeded arrival schedules
+  (Poisson at a target RPS, day-cycle ramps/peaks, bursts, zero-traffic
+  gaps), JSON round-trip replayable, wall-clock ``scaled()`` for tests.
+* :class:`EnginePool` — R engine replicas behind one engine surface;
+  ``arm_autoscale(AutoscalePolicy(...))`` (or
+  ``ServingConfig(replicas=R, autoscale=...)``) makes it elastic:
+  occupancy-driven grow/shrink with a modeled
+  :class:`~repro.serving.pool.ColdStartModel`, scale-to-zero on traffic
+  gaps and poke-to-warm on the first arrival after one.
+* :class:`EngineLike` — the explicit protocol every engine backing
+  implements (below).
+
+EngineLike protocol
+-------------------
+``JAXExecutor`` types against :class:`EngineLike`, not against a
+concrete engine or pool — anything implementing the protocol can back
+an executor:
+
+* ``submit(prompt, **kw) -> Request`` — enqueue; the returned request
+  object IS the future (``req.done`` / ``req.text``; result *polling*
+  is the executor's job, built on ``req.done``)
+* ``step() -> list[Request]`` — one admit/prefill/decode pass;
+  returns newly finished requests
+* ``pump() -> bool`` — step only if there is work; returns progress
+  (the fleet loop's per-pass entry point)
+* ``cancel(req) -> bool`` — withdraw a request, freeing its KV slot
+* ``saturated() -> bool`` — live occupancy: no free KV slot anywhere
+  (the fleet's cloud→edge spill consults exactly this)
+* ``run_until(req) -> Request`` — synchronous drain for one request
+* ``capacity`` / ``load`` / ``has_work`` / ``stats`` — slot capacity,
+  active+queued requests, pending-work flag, counters dict
+
+``ServingEngine`` (one KV slot pool) and ``EnginePool`` (R replicas)
+both declare it — asserted at import time below and checkable at
+runtime via ``isinstance(x, EngineLike)``.
 
 Failure-semantics contract
 --------------------------
@@ -27,6 +77,9 @@ fixed answer to "what retries, what degrades, what surfaces":
   progress for ``suspect_after`` passes turns **suspect**: its work is
   hedged onto healthy replicas and dispatch deprioritizes it until it
   recovers. Only all-replicas-dead (or ``failover=False``) surfaces.
+  Elastic lifecycle states (warm/warming/cold) are orthogonal to health:
+  failover and hedging target warm replicas, straggler detection skips
+  replicas that are merely warming.
 
 With ``retry=None`` and no faults, every fault path is provably inert:
 runs are bit-identical to the pre-fault-tolerance stack (chaos suite:
@@ -34,13 +87,64 @@ runs are bit-identical to the pre-fault-tolerance stack (chaos suite:
 ``FaultPlan``/``FaultInjector`` chaos harness that exercises all of the
 above reproducibly (``launch/serve.py --faults``).
 """
+from typing import List, Protocol, runtime_checkable
+
 from repro.core.scheduler import RetryPolicy
 from repro.serving.engine import JAXExecutor, Request, ServingEngine
 from repro.serving.faults import (FaultError, FaultInjector, FaultPlan,
                                   InjectedFault)
-from repro.serving.pool import EnginePool
-from repro.serving.runtime import RuntimeReport, ServingRuntime
+from repro.serving.pool import (AutoscalePolicy, Autoscaler, ColdStartModel,
+                                EnginePool)
+from repro.serving.runtime import (RuntimeReport, ServingConfig,
+                                   ServingRuntime)
+from repro.serving.traffic import Phase, Trace, day_cycle
 
-__all__ = ["EnginePool", "FaultError", "FaultInjector", "FaultPlan",
-           "InjectedFault", "JAXExecutor", "Request", "RetryPolicy",
-           "RuntimeReport", "ServingEngine", "ServingRuntime"]
+
+@runtime_checkable
+class EngineLike(Protocol):
+    """What ``JAXExecutor`` (and the fleet loop through it) requires of
+    an engine backing — see the module docstring for the semantics of
+    each member. Implemented by ``ServingEngine`` and ``EnginePool``."""
+
+    @property
+    def capacity(self) -> int: ...
+
+    @property
+    def load(self) -> int: ...
+
+    @property
+    def has_work(self) -> bool: ...
+
+    @property
+    def stats(self) -> dict: ...
+
+    def submit(self, prompt, **kw) -> Request: ...
+
+    def step(self) -> List[Request]: ...
+
+    def pump(self) -> bool: ...
+
+    def cancel(self, req: Request) -> bool: ...
+
+    def saturated(self) -> bool: ...
+
+    def run_until(self, req: Request, max_steps: int = 10_000) -> Request: ...
+
+
+# both backings declare the protocol; catching a drift here (at import
+# time) beats an AttributeError deep inside a fleet run ("stats" is an
+# instance attribute on ServingEngine, so it is checked per-instance via
+# isinstance(x, EngineLike) instead)
+for _impl in (ServingEngine, EnginePool):
+    _missing = [m for m in ("capacity", "load", "has_work",
+                            "submit", "step", "pump", "cancel", "saturated",
+                            "run_until") if not hasattr(_impl, m)]
+    assert not _missing, \
+        f"{_impl.__name__} does not satisfy EngineLike: missing {_missing}"
+del _impl, _missing
+
+__all__ = ["AutoscalePolicy", "Autoscaler", "ColdStartModel", "EngineLike",
+           "EnginePool", "FaultError", "FaultInjector", "FaultPlan",
+           "InjectedFault", "JAXExecutor", "Phase", "Request", "RetryPolicy",
+           "RuntimeReport", "ServingConfig", "ServingEngine",
+           "ServingRuntime", "Trace", "day_cycle"]

@@ -52,11 +52,14 @@ from __future__ import annotations
 import functools
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, TYPE_CHECKING
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+if TYPE_CHECKING:  # the protocol lives in the package root (no cycle)
+    from repro.serving import EngineLike
 
 from repro.configs.base import ModelConfig
 from repro.data import tokenizer as tok
@@ -270,6 +273,11 @@ class ServingEngine:
             self.step()
             return True
         return False
+
+    def saturated(self) -> bool:
+        """EngineLike surface: every KV slot is leased (a pool is
+        saturated only when every replica is)."""
+        return self.load >= self.slots
 
     def run_until_done(self, max_steps: int = 10_000) -> List[Request]:
         done: List[Request] = []
@@ -550,9 +558,9 @@ class JAXExecutor:
     ``concurrency`` cap.
     """
 
-    def __init__(self, engine, wm, cloud: bool,
+    def __init__(self, engine: "EngineLike", wm, cloud: bool,
                  concurrency: Optional[int] = None, price_out: float = 0.0):
-        self.engine = engine
+        self.engine: "EngineLike" = engine
         self.wm = wm
         self.cloud = cloud
         # derived caps track capacity if the engine is later pooled; an
@@ -563,11 +571,11 @@ class JAXExecutor:
         self.price_out = price_out
 
     def saturated(self) -> bool:
-        """True when no replica has a free KV slot (spill eligibility)."""
-        sat = getattr(self.engine, "all_saturated", None)
-        if sat is not None:
-            return bool(sat)
-        return self.engine.load >= self.engine.slots
+        """True when no replica has a free KV slot (spill eligibility).
+        Uniform across backings: ``EngineLike.saturated()`` is the
+        protocol method both ``ServingEngine`` and ``EnginePool``
+        implement, so there is no engine-vs-pool branching here."""
+        return bool(self.engine.saturated())
 
     # ---- async surface (fleet pump loop) -------------------------------
     def submit(self, query, node, dep_results) -> _Inflight:
@@ -589,8 +597,7 @@ class JAXExecutor:
     def cancel(self, h: _Inflight) -> bool:
         """Withdraw a (timed-out) attempt so its KV slot frees now — the
         fleet scheduler's deadline path calls this before re-dispatch."""
-        cancel = getattr(self.engine, "cancel", None)
-        return bool(cancel(h.req)) if cancel is not None else False
+        return bool(self.engine.cancel(h.req))
 
     def attempt_cost(self, h: _Inflight) -> float:
         """$ already sunk into an attempt: tokens decoded so far. The

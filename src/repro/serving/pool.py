@@ -67,13 +67,188 @@ replica_errors).
 ``EnginePool.like`` scales out an existing engine, keeping it as replica
 0 (external handles to it stay live) and cloning R-1 siblings with
 distinct sampling seeds.
+
+Elasticity
+----------
+``arm_autoscale(AutoscalePolicy(...))`` makes the pool *elastic*: each
+replica carries a lifecycle state — **warm** (serving), **warming**
+(paying the modeled cold start), **cold** (scaled down) — orthogonal to
+its health state. An :class:`Autoscaler` ticks on the pool's wall clock
+(every ``pump``/``step``/``submit``) and:
+
+* **grows** — starts warming a cold replica when live load presses on
+  the warm+warming capacity (``load > capacity * scale_up_at``); the
+  replica serves only after the modeled :class:`ColdStartModel` phases
+  (boot + model load + first inference) have elapsed;
+* **shrinks** — cools an idle warm replica when occupancy drops under
+  ``scale_down_at`` (never below ``max(min_replicas, 1)`` this way);
+* **scales to zero** — with ``min_replicas=0``, a traffic gap longer
+  than ``idle_to_zero_s`` cools every warm replica;
+* **pokes** — the first ``submit`` after a gap finds no warm/warming
+  replica and starts one warming ("poke-to-warm"); the request queues
+  on it and waits out the cold start.
+
+Only *warm* replicas step; warming/cold replicas hold queued work
+without progress (straggler detection skips them). Scale-down is a
+*model*: replicas share one host here, so cooling stops a replica's
+passes and charges the re-warm cost without actually releasing its KV
+memory — the cost accounting, not the allocator, is the contract.
+Every decision lands in ``Autoscaler.events`` / ``pool_stats`` and is
+surfaced through the runtime report.
 """
 from __future__ import annotations
 
+import time
 from concurrent.futures import ThreadPoolExecutor
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.serving.engine import Request, ServingEngine
+
+
+@dataclass(frozen=True)
+class ColdStartModel:
+    """Modeled cost of bringing a cold replica up, split into the three
+    phases worth modeling separately (boot, weight load, first-inference
+    warm-up/compile); a warming replica serves only after all three."""
+
+    boot_s: float = 0.4
+    model_load_s: float = 0.8
+    first_infer_s: float = 0.3
+
+    @property
+    def total_s(self) -> float:
+        return self.boot_s + self.model_load_s + self.first_infer_s
+
+
+@dataclass(frozen=True)
+class AutoscalePolicy:
+    """Occupancy-driven elasticity policy for an :class:`EnginePool`.
+
+    ``scale_up_at`` / ``scale_down_at`` are load fractions of the
+    current warm+warming slot capacity; ``max_replicas=None`` means the
+    pool's full replica count. ``min_replicas=0`` enables scale-to-zero
+    after ``idle_to_zero_s`` of an empty pool.
+    """
+
+    min_replicas: int = 0
+    max_replicas: Optional[int] = None
+    scale_up_at: float = 0.8
+    scale_down_at: float = 0.25
+    idle_to_zero_s: float = 1.0
+    decision_interval_s: float = 0.05
+    cold_start: ColdStartModel = field(default_factory=ColdStartModel)
+
+    def __post_init__(self):
+        if self.min_replicas < 0:
+            raise ValueError("min_replicas must be >= 0")
+        if not (0.0 < self.scale_up_at <= 1.0):
+            raise ValueError("scale_up_at must be in (0, 1]")
+        if not (0.0 <= self.scale_down_at < self.scale_up_at):
+            raise ValueError("scale_down_at must be in [0, scale_up_at)")
+
+
+class Autoscaler:
+    """Grows/shrinks an :class:`EnginePool`'s warm replica set from live
+    occupancy. Pure bookkeeping over the pool's lifecycle list — ticked
+    from ``pump``/``step``/``submit``, no thread of its own. ``clock``
+    is injectable so tests can drive transitions deterministically."""
+
+    def __init__(self, pool: "EnginePool", policy: AutoscalePolicy,
+                 clock: Optional[Callable[[], float]] = None):
+        self.pool = pool
+        self.policy = policy
+        self.clock = clock if clock is not None else time.perf_counter
+        self._t0 = self.clock()
+        self.events: List[Tuple[float, str, int]] = []  # (t, action, replica)
+        self.counters: Dict[str, int] = {
+            "scale_ups": 0, "scale_downs": 0, "scale_to_zero": 0,
+            "pokes": 0, "promotions": 0}
+        self._ready_at: Dict[int, float] = {}
+        self._idle_since: Optional[float] = None
+        self._last_decision = float("-inf")
+        n_warm = min(max(policy.min_replicas, 0), pool.n_replicas)
+        for i in range(pool.n_replicas):
+            pool.lifecycle[i] = "warm" if i < n_warm else "cold"
+
+    def _now(self) -> float:
+        return self.clock() - self._t0
+
+    def _log(self, now: float, action: str, i: int) -> None:
+        self.events.append((round(now, 4), action, i))
+
+    def _start_warming(self, i: int, now: float, action: str) -> None:
+        self.pool.lifecycle[i] = "warming"
+        self._ready_at[i] = now + self.policy.cold_start.total_s
+        self.counters["scale_ups"] += 1
+        self._log(now, action, i)
+
+    def poke(self) -> Optional[int]:
+        """First arrival after a gap: start warming one cold replica so
+        the queued request has somewhere to land. Returns its index."""
+        pool = self.pool
+        cold = [i for i in pool._alive() if pool.lifecycle[i] == "cold"]
+        if not cold:
+            return None
+        self.counters["pokes"] += 1
+        self._start_warming(cold[0], self._now(), "poke")
+        return cold[0]
+
+    def tick(self) -> None:
+        now = self._now()
+        pool, p = self.pool, self.policy
+        # promotions first: a warming replica whose cold start has
+        # elapsed serves from this pass on
+        for i in sorted(self._ready_at):
+            if pool.health[i] == "dead":
+                del self._ready_at[i]
+            elif now >= self._ready_at[i]:
+                pool.lifecycle[i] = "warm"
+                del self._ready_at[i]
+                self.counters["promotions"] += 1
+                self._log(now, "warm", i)
+        load = pool.load
+        if load > 0:
+            self._idle_since = None
+        elif self._idle_since is None:
+            self._idle_since = now
+        if now - self._last_decision < p.decision_interval_s:
+            return
+        self._last_decision = now
+        alive = pool._alive()
+        warm = [i for i in alive if pool.lifecycle[i] == "warm"]
+        warming = [i for i in alive if pool.lifecycle[i] == "warming"]
+        cold = [i for i in alive if pool.lifecycle[i] == "cold"]
+        max_r = p.max_replicas if p.max_replicas is not None \
+            else pool.n_replicas
+        cap = sum(pool.engines[i].slots for i in warm + warming)
+        # grow: pending load pressing on the serving capacity
+        if (cold and len(warm) + len(warming) < max_r and load > 0
+                and (cap == 0 or load > cap * p.scale_up_at)):
+            self._start_warming(cold[0], now, "grow")
+            return
+        # scale to zero: a traffic gap outlasted idle_to_zero_s
+        if (p.min_replicas == 0 and warm and load == 0
+                and self._idle_since is not None
+                and now - self._idle_since >= p.idle_to_zero_s):
+            for i in warm:
+                pool.lifecycle[i] = "cold"
+                self.counters["scale_downs"] += 1
+                self._log(now, "to_zero", i)
+            self.counters["scale_to_zero"] += 1
+            return
+        # shrink: low occupancy, keep at least max(min_replicas, 1) warm
+        floor = max(p.min_replicas, 1)
+        idle_warm = [i for i in warm if pool.engines[i].load == 0]
+        if (len(warm) > floor and idle_warm and cap > 0
+                and load < cap * p.scale_down_at):
+            i = idle_warm[-1]
+            pool.lifecycle[i] = "cold"
+            self.counters["scale_downs"] += 1
+            self._log(now, "shrink", i)
+
+    def summary(self) -> Dict[str, object]:
+        return {"events": list(self.events), **self.counters}
 
 
 class EnginePool:
@@ -81,7 +256,8 @@ class EnginePool:
 
     def __init__(self, engines: Sequence[ServingEngine], *,
                  threads: bool = True, failover: bool = True,
-                 suspect_after: Optional[int] = None):
+                 suspect_after: Optional[int] = None,
+                 autoscale: Optional[AutoscalePolicy] = None):
         if not engines:
             raise ValueError("EnginePool needs at least one replica")
         self.engines: List[ServingEngine] = list(engines)
@@ -89,6 +265,12 @@ class EnginePool:
         self.failover = failover
         self.suspect_after = suspect_after
         self.health: List[str] = ["healthy"] * len(self.engines)
+        # lifecycle (warm/warming/cold) is orthogonal to health; without
+        # an autoscaler every replica is permanently warm
+        self.lifecycle: List[str] = ["warm"] * len(self.engines)
+        self.autoscaler: Optional[Autoscaler] = None
+        if autoscale is not None:
+            self.arm_autoscale(autoscale)
         self._tp: Optional[ThreadPoolExecutor] = None
         self._last_progress = [-1] * len(self.engines)
         self._stalled_passes = [0] * len(self.engines)
@@ -107,6 +289,7 @@ class EnginePool:
     def replicate(cls, cfg, params, *, replicas: int, seed: int = 0,
                   threads: bool = True, failover: bool = True,
                   suspect_after: Optional[int] = None,
+                  autoscale: Optional[AutoscalePolicy] = None,
                   **engine_kw) -> "EnginePool":
         """R fresh replicas sharing one params pytree. Replica i samples
         with ``seed + i`` so replica 0 matches a lone engine built with
@@ -115,7 +298,8 @@ class EnginePool:
             raise ValueError("replicas must be >= 1")
         return cls([ServingEngine(cfg, params, seed=seed + i, **engine_kw)
                     for i in range(replicas)], threads=threads,
-                   failover=failover, suspect_after=suspect_after)
+                   failover=failover, suspect_after=suspect_after,
+                   autoscale=autoscale)
 
     @classmethod
     def like(cls, engine: ServingEngine, replicas: int, *,
@@ -129,6 +313,15 @@ class EnginePool:
                                for i in range(1, replicas)],
                    threads=threads)
 
+    # ---- elasticity ----------------------------------------------------
+    def arm_autoscale(self, policy: AutoscalePolicy, *,
+                      clock: Optional[Callable[[], float]] = None
+                      ) -> Autoscaler:
+        """Attach an :class:`Autoscaler`: replicas beyond
+        ``policy.min_replicas`` start cold and are warmed on demand."""
+        self.autoscaler = Autoscaler(self, policy, clock=clock)
+        return self.autoscaler
+
     # ---- occupancy -----------------------------------------------------
     @property
     def n_replicas(self) -> int:
@@ -137,6 +330,12 @@ class EnginePool:
     def _alive(self) -> List[int]:
         return [i for i in range(len(self.engines))
                 if self.health[i] != "dead"]
+
+    def _eligible(self) -> List[int]:
+        """Replicas that can accept/serve work now-or-soon: alive and not
+        scaled down (warming counts — queued work waits out the cold
+        start there)."""
+        return [i for i in self._alive() if self.lifecycle[i] != "cold"]
 
     @property
     def capacity(self) -> int:
@@ -173,7 +372,8 @@ class EnginePool:
                  "requests": e.stats["requests"],
                  "slot_reuses": e.stats["slot_reuses"],
                  "peak_active": e.stats["peak_active"],
-                 "health": self.health[i]}
+                 "health": self.health[i],
+                 "lifecycle": self.lifecycle[i]}
                 for i, e in enumerate(self.engines)]
 
     # gauges describe one replica's high-water mark, not fleet volume:
@@ -203,17 +403,38 @@ class EnginePool:
         agg["suspects"] = self.pool_stats["suspects"]
         agg["hedges"] = self.pool_stats["hedges"]
         agg["replica_health"] = list(self.health)
+        if self.autoscaler is not None:
+            agg["replica_lifecycle"] = list(self.lifecycle)
+            agg["autoscale"] = self.autoscaler.summary()
         return agg
 
     # ---- engine surface ------------------------------------------------
+    def saturated(self) -> bool:
+        """EngineLike surface: live occupancy says no replica can admit
+        another request (spill eligibility; see ``all_saturated``)."""
+        return self.all_saturated
+
     def submit(self, prompt, **kw) -> Request:
         """Enqueue on the least-loaded surviving replica (healthy
-        replicas beat suspect ones; ties → lowest index)."""
+        replicas beat suspect ones, warm replicas beat warming on equal
+        load; ties → lowest index). An elastic pool with nothing warm is
+        poked first — the first arrival after a gap starts a cold
+        replica warming and queues on it."""
         alive = self._alive()
         if not alive:
             raise RuntimeError("EnginePool.submit: all replicas are dead")
-        i = min(alive, key=lambda j: (self.health[j] != "healthy",
-                                      self.engines[j].load, j))
+        if self.autoscaler is not None:
+            self.autoscaler.tick()
+            cands = self._eligible()
+            if not cands:
+                self.autoscaler.poke()
+                cands = self._eligible()
+            cands = cands or alive
+        else:
+            cands = alive
+        i = min(cands, key=lambda j: (self.health[j] != "healthy",
+                                      self.engines[j].load,
+                                      self.lifecycle[j] != "warm", j))
         self.pool_stats["submitted"][i] += 1
         return self.engines[i].submit(prompt, **kw)
 
@@ -225,9 +446,14 @@ class EnginePool:
         from its worker thread, the fast path, or any sequential phase —
         is handed to ``_kill_replica`` *after* every sibling's results
         are joined, so one crash never loses another replica's finished
-        requests or deadlocks the join."""
+        requests or deadlocks the join. Only *warm* replicas step —
+        warming replicas hold their queues until the autoscaler promotes
+        them (every replica is warm when no autoscaler is armed)."""
+        if self.autoscaler is not None:
+            self.autoscaler.tick()
         loaded = [(i, self.engines[i]) for i in self._alive()
-                  if self.engines[i].has_work]
+                  if self.engines[i].has_work
+                  and self.lifecycle[i] == "warm"]
         if not loaded:
             return []
         self.pool_stats["pump_passes"] += 1
@@ -317,9 +543,18 @@ class EnginePool:
             raise RuntimeError(
                 f"all {len(self.engines)} replicas dead with "
                 f"{len(orphans)} requests stranded") from exc
+        # failover lands on serving replicas; if the survivors are all
+        # scaled down, poke one awake rather than stranding work cold
+        targets = self._eligible()
+        if orphans and not targets and self.autoscaler is not None:
+            self.autoscaler.poke()
+            targets = self._eligible()
+        targets = targets or alive
         for r in orphans:
-            j = min(alive, key=lambda j_: (self.health[j_] != "healthy",
-                                           self.engines[j_].load, j_))
+            j = min(targets, key=lambda j_: (self.health[j_] != "healthy",
+                                             self.engines[j_].load,
+                                             self.lifecycle[j_] != "warm",
+                                             j_))
             r.output_ids.clear()
             r.done = False
             r._engine = self.engines[j]
@@ -344,7 +579,7 @@ class EnginePool:
                 self._stalled_passes[i] = 0
                 if self.health[i] == "suspect":
                     self.health[i] = "healthy"
-            elif e.has_work:
+            elif e.has_work and self.lifecycle[i] == "warm":
                 self._stalled_passes[i] += 1
                 if (self._stalled_passes[i] >= self.suspect_after
                         and self.health[i] == "healthy"):
@@ -358,7 +593,8 @@ class EnginePool:
         suspect keeps nothing but stays eligible to recover; with no
         healthy replica left the work stays put."""
         healthy = [j for j in range(len(self.engines))
-                   if self.health[j] == "healthy"]
+                   if self.health[j] == "healthy"
+                   and self.lifecycle[j] == "warm"]
         if not healthy:
             return
         src = self.engines[i]
@@ -384,7 +620,12 @@ class EnginePool:
 
     def pump(self) -> bool:
         """Advance every replica with pending work one step, in one
-        pass. Returns whether anything progressed."""
+        pass. Returns whether anything progressed. Elastic pools tick
+        their autoscaler even on empty passes — that is what lets a pool
+        scale to zero during a traffic gap and promote warming replicas
+        on wall-clock time."""
+        if self.autoscaler is not None:
+            self.autoscaler.tick()
         if not self.has_work:
             return False
         self.step()

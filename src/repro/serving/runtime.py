@@ -15,16 +15,37 @@ Quickstart (analytic world-model executors)::
     from repro.core.hybridflow import Pipeline, HybridFlowPolicy
     from repro.core.profiler import train_default_router
     from repro.data.tasks import gen_benchmark
-    from repro.serving.runtime import ServingRuntime
+    from repro.serving.runtime import ServingConfig, ServingRuntime
 
     pipe = Pipeline()                      # edge + cloud executor pair
     router, _ = train_default_router()
     policy = HybridFlowPolicy(router, wm=pipe.wm)
     rt = ServingRuntime(pipe.edge, pipe.cloud, policy,
-                        planner=pipe.planner, max_inflight=8,
-                        global_k_max=1.0)
+                        planner=pipe.planner,
+                        config=ServingConfig(max_inflight=8,
+                                             global_k_max=1.0))
     report = rt.serve(gen_benchmark("gpqa", 32))
     print(report.qps, report.p50_latency, report.p99_latency)
+
+All runtime knobs live on the frozen :class:`ServingConfig`; the old
+flat ``ServingRuntime(..., max_inflight=8, pump=True, ...)`` kwargs are
+still accepted for one release through a deprecation shim that maps
+them into a config and warns. One dispatcher runs every mode::
+
+    rt.serve(queries)                          # closed loop (fleet)
+    rt.serve(queries, mode="sequential")       # one-at-a-time baseline
+    rt.serve(queries, arrivals=trace)          # open loop (timed admission)
+    rt.serve_trace(trace, queries)             # alias for the above
+
+Open-loop serving replays a ``serving.traffic.Trace`` (seeded Poisson /
+day-cycle / burst arrival schedules): queries enter the fleet at their
+arrival times, per-query TTFT and queue wait land on each
+``QueryResult``, and ``report.trace`` carries offered-vs-served RPS plus
+any autoscaler decisions. An elastic cloud
+(``ServingConfig(replicas=R, autoscale=AutoscalePolicy(...))``) grows
+and shrinks warm replicas from live occupancy, pays a modeled cold
+start, scales to zero in traffic gaps and re-warms on the first arrival
+after one (see ``serving.pool``).
 
 The same runtime drives real JAX engines by passing ``JAXExecutor`` pairs
 (see ``examples/serve_hybrid.py``). Async executors are auto-detected and
@@ -58,8 +79,9 @@ from __future__ import annotations
 
 import math
 import time
+import warnings
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -68,16 +90,65 @@ from repro.core.dual import TwoBudgetThreshold
 from repro.core.scheduler import (Executor, FleetScheduler, QueryResult,
                                   RetryPolicy, RoutingPolicy, Schedule)
 from repro.data.tasks import Query
+from repro.serving.traffic import Trace
+
+
+@dataclass(frozen=True)
+class ServingConfig:
+    """Every ``ServingRuntime`` knob in one frozen value object.
+
+    Admission & budgets:
+      * ``max_inflight`` — concurrently admitted queries (None = no cap)
+      * ``global_k_max`` / ``global_l_max`` — fleet-wide $ / wall-clock
+        budget caps (see ``_global_threshold``)
+      * ``spill_to_edge`` — re-route cloud-bound work to an idle edge
+        slot when the cloud is saturated
+
+    Drivers & capacity:
+      * ``pump`` — event-loop driver: True = real-time pump loop,
+        False = synchronous dispatch, None = auto-detect from executors
+      * ``replicas`` — shard an engine-backed cloud executor across an
+        R-replica ``EnginePool``
+      * ``autoscale`` — an ``AutoscalePolicy`` making that pool elastic
+        (requires a pooled, engine-backed cloud)
+
+    Fault tolerance:
+      * ``retry`` — scheduler-side recovery (``RetryPolicy``)
+      * ``faults`` — deterministic chaos: a ``FaultPlan``, a built
+        ``FaultInjector`` or a spec string ("submit_fail=0.1,...")
+      * ``stall_grace`` — idle seconds the pumped driver tolerates
+        before declaring the fleet stalled (recovery armed only)
+    """
+
+    max_inflight: Optional[int] = 8
+    global_k_max: Optional[float] = None
+    global_l_max: Optional[float] = None
+    spill_to_edge: bool = False
+    pump: Optional[bool] = None
+    replicas: Optional[int] = None
+    autoscale: Optional["AutoscalePolicy"] = None  # noqa: F821 (lazy import)
+    retry: Optional[RetryPolicy] = None
+    faults: object = None
+    stall_grace: float = 5.0
+
+
+# legacy flat-kwarg surface, accepted for one release via the shim below
+_LEGACY_KEYS = ("max_inflight", "global_k_max", "global_l_max",
+                "spill_to_edge", "pump", "replicas", "retry", "faults",
+                "stall_grace")
 
 
 @dataclass
 class RuntimeReport:
-    """Fleet-level outcome of one ``serve``/``serve_sequential`` call."""
+    """Fleet-level outcome of one ``serve`` call (any mode)."""
 
     results: List[QueryResult]
     makespan: float            # simulated fleet makespan (s)
     wall_s: float              # real wall-clock spent inside the loop
     stats: Dict[str, int] = field(default_factory=dict)
+    # open-loop only: offered traffic + autoscale outcome (None otherwise,
+    # keeping the closed-loop report shape exactly as before)
+    trace: Optional[Dict[str, object]] = None
 
     @property
     def n(self) -> int:
@@ -112,11 +183,38 @@ class RuntimeReport:
     def p99_latency(self) -> float:
         return self.latency_percentile(99)
 
+    def ttft_percentile(self, p: float) -> float:
+        """Percentile of per-query TTFT (arrival -> first completed
+        subtask); meaningful for open-loop runs."""
+        if not self.results:
+            return 0.0
+        return float(np.percentile([r.ttft for r in self.results], p))
+
+    @property
+    def p50_ttft(self) -> float:
+        return self.ttft_percentile(50)
+
+    @property
+    def p99_ttft(self) -> float:
+        return self.ttft_percentile(99)
+
+    def queue_wait_percentile(self, p: float) -> float:
+        """Percentile of per-query admission wait (arrival -> admission)."""
+        if not self.results:
+            return 0.0
+        return float(np.percentile([r.queue_wait for r in self.results], p))
+
     def summary(self) -> str:
-        return (f"{self.n} queries | makespan {self.makespan:.2f}s | "
+        line = (f"{self.n} queries | makespan {self.makespan:.2f}s | "
                 f"{self.qps:.2f} q/s | acc {self.accuracy:.2f} | "
                 f"p50 {self.p50_latency:.2f}s p99 {self.p99_latency:.2f}s | "
                 f"API ${self.api_cost:.4f}")
+        if self.trace is not None:
+            line += (f" | offered {self.trace['offered_rps']:.2f} rps | "
+                     f"ttft p50 {self.p50_ttft:.2f}s "
+                     f"p99 {self.p99_ttft:.2f}s | queue p99 "
+                     f"{self.queue_wait_percentile(99):.2f}s")
+        return line
 
 
 def _global_threshold(k_max: Optional[float],
@@ -141,33 +239,57 @@ class ServingRuntime:
 
     def __init__(self, edge: Executor, cloud: Executor,
                  policy: RoutingPolicy, *, planner=None,
-                 max_inflight: Optional[int] = 8,
-                 global_k_max: Optional[float] = None,
-                 global_l_max: Optional[float] = None,
-                 spill_to_edge: bool = False,
-                 pump: Optional[bool] = None,
-                 replicas: Optional[int] = None,
-                 retry: Optional[RetryPolicy] = None,
-                 faults=None,
-                 stall_grace: float = 5.0):
+                 config: Optional[ServingConfig] = None, **legacy):
+        bad = set(legacy) - set(_LEGACY_KEYS)
+        if bad:
+            raise TypeError(f"ServingRuntime got unexpected keyword "
+                            f"argument(s): {sorted(bad)}")
+        if legacy:
+            if config is not None:
+                raise TypeError(
+                    "pass either config=ServingConfig(...) or the legacy "
+                    "flat kwargs, not both")
+            warnings.warn(
+                "ServingRuntime flat kwargs "
+                f"({', '.join(sorted(legacy))}) are deprecated; pass "
+                "config=ServingConfig(...) instead",
+                DeprecationWarning, stacklevel=2)
+            config = ServingConfig(**legacy)
+        cfg = config if config is not None else ServingConfig()
+        self.config = cfg
         self.edge = edge
-        self.cloud = self._pooled_cloud(cloud, replicas)
+        self.cloud = self._pooled_cloud(cloud, cfg.replicas)
+        self._arm_autoscale(cfg.autoscale)
         self.policy = policy
         self.planner = planner
-        self.max_inflight = max_inflight
-        self.global_k_max = global_k_max
-        self.global_l_max = global_l_max
-        self.spill_to_edge = spill_to_edge
-        self.pump = pump
-        self.stall_grace = stall_grace
-        self.fault_injector = self._make_injector(faults)
+        self.max_inflight = cfg.max_inflight
+        self.global_k_max = cfg.global_k_max
+        self.global_l_max = cfg.global_l_max
+        self.spill_to_edge = cfg.spill_to_edge
+        self.pump = cfg.pump
+        self.stall_grace = cfg.stall_grace
+        self.fault_injector = self._make_injector(cfg.faults)
         # chaos without recovery would only prove the fleet can crash
-        self.retry = retry if retry is not None or faults is None \
+        self.retry = cfg.retry \
+            if cfg.retry is not None or cfg.faults is None \
             else RetryPolicy()
         self._wrap_faulty()
         self.global_budget: Optional[TwoBudgetThreshold] = None
         self._pending: List[Tuple[Query, PlanDAG, str,
                                   Optional[Schedule]]] = []
+
+    def _arm_autoscale(self, policy) -> None:
+        """Make the (pooled, engine-backed) cloud elastic."""
+        if policy is None:
+            return
+        from repro.serving.pool import EnginePool
+        eng = getattr(self.cloud, "engine", None)
+        if not isinstance(eng, EnginePool):
+            raise ValueError(
+                "autoscale= needs an EnginePool-backed cloud executor — "
+                "pass ServingConfig(replicas=R, autoscale=...) or build "
+                "the JAXExecutor over an EnginePool yourself")
+        eng.arm_autoscale(policy)
 
     @staticmethod
     def _make_injector(faults):
@@ -253,6 +375,10 @@ class ServingRuntime:
             health = getattr(eng, "health", None)
             if health is not None:
                 stats[f"{name}_replica_health"] = list(health)
+            scaler = getattr(eng, "autoscaler", None)
+            if scaler is not None:
+                stats[f"{name}_lifecycle"] = list(eng.lifecycle)
+                stats[f"{name}_autoscale"] = scaler.summary()
         if self.fault_injector is not None:
             stats["injected"] = dict(self.fault_injector.stats)
         return stats
@@ -270,11 +396,37 @@ class ServingRuntime:
         return len(self._pending) - 1
 
     # ---- execution ----------------------------------------------------
-    def serve(self, queries: Sequence[Query] = ()) -> RuntimeReport:
-        """Drain everything submitted (plus ``queries``) concurrently."""
+    def serve(self, queries: Sequence[Query] = (), *,
+              arrivals: Union[Trace, Sequence[float], None] = None,
+              mode: str = "fleet") -> RuntimeReport:
+        """One dispatcher for every serving mode.
+
+        * ``mode="fleet"`` (default), no ``arrivals`` — closed loop:
+          drain everything submitted (plus ``queries``) concurrently.
+        * ``mode="fleet"``, ``arrivals=`` a ``Trace`` or a sequence of
+          arrival times (seconds, one per query in submit order) — open
+          loop: queries enter the fleet at their arrival times and the
+          report carries TTFT / queue-wait / offered-RPS metrics.
+        * ``mode="sequential"`` — the one-query-at-a-time baseline
+          (delegates to ``serve_sequential``; no arrivals).
+        """
+        if mode == "sequential":
+            if arrivals is not None:
+                raise ValueError("arrivals= requires mode='fleet'")
+            return self.serve_sequential(queries)
+        if mode != "fleet":
+            raise ValueError(f"unknown serve mode {mode!r} "
+                             f"(expected 'fleet' or 'sequential')")
         for q in queries:
             self.submit(q)
         batch, self._pending = self._pending, []
+        times: Optional[List[float]] = None
+        if arrivals is not None:
+            times = [float(a) for a in arrivals]
+            if len(times) != len(batch):
+                raise ValueError(
+                    f"arrivals length {len(times)} != {len(batch)} "
+                    f"queries (one arrival time per query, submit order)")
         self.global_budget = _global_threshold(self.global_k_max,
                                                self.global_l_max)
         fleet = FleetScheduler(self.edge, self.cloud,
@@ -283,14 +435,47 @@ class ServingRuntime:
                                spill_to_edge=self.spill_to_edge,
                                pump=self.pump, retry=self.retry,
                                stall_grace=self.stall_grace)
-        for q, dag, status, sched in batch:
+        for i, (q, dag, status, sched) in enumerate(batch):
             fleet.submit(q, dag, self.policy, plan_status=status,
-                         schedule_out=sched)
+                         schedule_out=sched,
+                         arrival=times[i] if times else 0.0)
         t0 = time.perf_counter()
         results = fleet.run()
         wall = time.perf_counter() - t0
-        return RuntimeReport(results, fleet.makespan, wall,
-                             stats=self._pool_occupancy(dict(fleet.stats)))
+        report = RuntimeReport(
+            results, fleet.makespan, wall,
+            stats=self._pool_occupancy(dict(fleet.stats)))
+        if times is not None:
+            report.trace = self._trace_summary(arrivals, times, report)
+        return report
+
+    def serve_trace(self, trace: Trace,
+                    queries: Sequence[Query] = ()) -> RuntimeReport:
+        """Replay an open-loop arrival trace: ``len(trace)`` queries
+        (submitted + ``queries``) enter the fleet at the trace's arrival
+        times. Alias for ``serve(queries, arrivals=trace)``."""
+        return self.serve(queries, arrivals=trace)
+
+    def _trace_summary(self, arrivals, times: List[float],
+                       report: RuntimeReport) -> Dict[str, object]:
+        """Offered-vs-served traffic summary attached to the report."""
+        horizon = arrivals.duration if isinstance(arrivals, Trace) \
+            else (max(times) if times else 0.0)
+        out: Dict[str, object] = {
+            "n": len(times),
+            "duration": float(horizon),
+            "offered_rps": len(times) / horizon if horizon > 0 else 0.0,
+            "served_rps": report.qps,
+        }
+        if isinstance(arrivals, Trace):
+            out["label"] = arrivals.label
+            out["seed"] = arrivals.seed
+            out["target_rps"] = arrivals.target_rps
+        scaler = getattr(getattr(self.cloud, "engine", None),
+                         "autoscaler", None)
+        if scaler is not None:
+            out["autoscale"] = scaler.summary()
+        return out
 
     def serve_sequential(self, queries: Sequence[Query] = ()) -> RuntimeReport:
         """One-query-at-a-time baseline (the seed's serving shape): each

@@ -289,8 +289,10 @@ def _serve(model_zoo, queries, *, faults=None, retry=None, replicas=2):
                        cloud=False)
     cloud = JAXExecutor(_pool(model_zoo, replicas=replicas), wm,
                         cloud=True, price_out=3.2e-5)
-    rt = ServingRuntime(edge, cloud, StaticPolicy(1), max_inflight=6,
-                        pump=True, faults=faults, retry=retry)
+    from repro.serving.runtime import ServingConfig
+    rt = ServingRuntime(edge, cloud, StaticPolicy(1),
+                        config=ServingConfig(max_inflight=6, pump=True,
+                                             faults=faults, retry=retry))
     for q, dag in queries:
         rt.submit(q, dag)
     return rt.serve()

@@ -40,9 +40,10 @@ def _fleet_serve(cfg, params, cloud_eng, queries):
                                      max_len=128),
                        wm, cloud=False, concurrency=1)
     cloud = JAXExecutor(cloud_eng, wm, cloud=True, price_out=3.2e-5)
+    from repro.serving.runtime import ServingConfig
     rt = ServingRuntime(edge, cloud, StaticPolicy(1),
-                        planner=SyntheticPlanner(), max_inflight=4,
-                        pump=True)
+                        planner=SyntheticPlanner(),
+                        config=ServingConfig(max_inflight=4, pump=True))
     return rt.serve(queries)
 
 
@@ -203,9 +204,10 @@ def test_runtime_replicas_threading(model_zoo):
     cloud = JAXExecutor(ServingEngine(cfg, params, batch_slots=2,
                                       max_len=128),
                         wm, cloud=True, price_out=3.2e-5)
+    from repro.serving.runtime import ServingConfig
     rt = ServingRuntime(edge, cloud, StaticPolicy(1),
-                        planner=SyntheticPlanner(), max_inflight=4,
-                        replicas=2)
+                        planner=SyntheticPlanner(),
+                        config=ServingConfig(max_inflight=4, replicas=2))
     assert isinstance(rt.cloud.engine, EnginePool)
     assert rt.cloud.engine.n_replicas == 2
     assert rt.cloud.concurrency == 4
@@ -221,7 +223,8 @@ def test_runtime_replicas_threading(model_zoo):
                                        max_len=128),
                          wm, cloud=True, concurrency=2, price_out=3.2e-5)
     rt_capped = ServingRuntime(edge, capped, StaticPolicy(1),
-                               planner=SyntheticPlanner(), replicas=2)
+                               planner=SyntheticPlanner(),
+                               config=ServingConfig(replicas=2))
     assert rt_capped.cloud.engine.n_replicas == 2
     assert rt_capped.cloud.concurrency == 2
 
@@ -229,4 +232,192 @@ def test_runtime_replicas_threading(model_zoo):
     pipe = Pipeline()
     with pytest.raises(ValueError, match="engine-backed"):
         ServingRuntime(pipe.edge, pipe.cloud, StaticPolicy(1),
-                       planner=pipe.planner, replicas=2)
+                       planner=pipe.planner,
+                       config=ServingConfig(replicas=2))
+
+
+# ---- elastic autoscaling -----------------------------------------------
+
+def test_autoscaler_grow_shrink_to_zero_synthetic_ramp(model_zoo):
+    """Drive the autoscaler through a full synthetic occupancy ramp on an
+    injected clock: poke → warm → grow under load → shrink as load falls
+    → scale-to-zero after the idle window → poke again on the next
+    submit. No wall-clock sleeps anywhere."""
+    from repro.serving.pool import AutoscalePolicy, ColdStartModel
+
+    cfg, params = model_zoo("qwen2-1.5b")
+    pool = EnginePool.replicate(cfg, params, replicas=3, batch_slots=2,
+                                max_len=64)
+    now = [0.0]
+    policy = AutoscalePolicy(min_replicas=0, scale_up_at=0.5,
+                             scale_down_at=0.4, idle_to_zero_s=1.0,
+                             decision_interval_s=0.0,
+                             cold_start=ColdStartModel(0.1, 0.1, 0.1))
+    sc = pool.arm_autoscale(policy, clock=lambda: now[0])
+    assert pool.lifecycle == ["cold"] * 3
+    assert pool.autoscaler is sc
+
+    # first arrival after cold start pokes replica 0 warm
+    reqs = [pool.submit("p0", max_new_tokens=2)]
+    assert sc.counters["pokes"] == 1
+    assert pool.lifecycle[0] == "warming"
+    now[0] = 0.5
+    sc.tick()
+    assert pool.lifecycle[0] == "warm"
+
+    # pile on load: occupancy over the grow threshold brings more
+    # replicas out of cold (capacity 2/replica, 4 reqs > 0.5 * cap)
+    reqs += [pool.submit(f"p{i}", max_new_tokens=2) for i in (1, 2, 3)]
+    now[0] = 0.6
+    sc.tick()
+    assert sc.counters["scale_ups"] >= 1
+    assert "warming" in pool.lifecycle
+    now[0] = 1.2
+    sc.tick()                                  # promote everything due
+    warm = [i for i, s in enumerate(pool.lifecycle) if s == "warm"]
+    assert len(warm) >= 2
+
+    # load falls to one request: occupancy under scale_down_at with an
+    # idle warm replica → shrink (never below one warm while loaded)
+    for r in reqs[1:]:
+        assert pool.cancel(r)
+    now[0] = 1.3
+    sc.tick()
+    assert sc.counters["scale_downs"] >= 1
+    assert pool.lifecycle.count("warm") >= 1
+
+    # full drain + idle window → scale to zero
+    assert pool.cancel(reqs[0])
+    now[0] = 1.4
+    sc.tick()                                  # starts the idle clock
+    now[0] = 3.0
+    sc.tick()
+    assert sc.counters["scale_to_zero"] == 1
+    assert pool.lifecycle.count("warm") == 0
+
+    # next arrival pokes the pool back to life
+    pool.submit("again", max_new_tokens=2)
+    assert sc.counters["pokes"] == 2
+    assert "warming" in pool.lifecycle
+    # the event log tells the whole story in order
+    actions = [a for _, a, _ in sc.events]
+    assert actions[0] == "poke"
+    assert "grow" in actions and "shrink" in actions \
+        and "to_zero" in actions
+    summary = sc.summary()
+    assert summary["scale_to_zero"] == 1 and summary["pokes"] == 2
+
+
+def test_autoscaler_respects_min_replicas(model_zoo):
+    """min_replicas=1 starts one replica warm and never cools the last
+    warm replica, no matter how long the pool idles."""
+    from repro.serving.pool import AutoscalePolicy, ColdStartModel
+    cfg, params = model_zoo("qwen2-1.5b")
+    pool = EnginePool.replicate(cfg, params, replicas=2, batch_slots=2,
+                                max_len=64)
+    now = [0.0]
+    sc = pool.arm_autoscale(
+        AutoscalePolicy(min_replicas=1, idle_to_zero_s=0.1,
+                        decision_interval_s=0.0,
+                        cold_start=ColdStartModel(0.1, 0.1, 0.1)),
+        clock=lambda: now[0])
+    assert pool.lifecycle == ["warm", "cold"]
+    for t in (1.0, 5.0, 50.0):
+        now[0] = t
+        sc.tick()
+    assert pool.lifecycle[0] == "warm"
+    assert sc.counters["scale_to_zero"] == 0
+
+
+def test_autoscale_policy_validation():
+    from repro.serving.pool import AutoscalePolicy
+    with pytest.raises(ValueError):
+        AutoscalePolicy(min_replicas=-1)
+    with pytest.raises(ValueError):
+        AutoscalePolicy(scale_up_at=0.0)
+    with pytest.raises(ValueError):
+        AutoscalePolicy(scale_up_at=0.5, scale_down_at=0.6)
+
+
+def test_elastic_pool_serves_through_fleet(model_zoo):
+    """An armed pool behind the fleet scheduler still completes every
+    query: warming replicas never step, but the first poke plus
+    promotions give the fleet capacity as it needs it."""
+    from repro.core.planner import SyntheticPlanner
+    from repro.data.tasks import WorldModel as WM
+    from repro.serving.pool import AutoscalePolicy, ColdStartModel
+    from repro.serving.runtime import ServingConfig
+    cfg, params = model_zoo("qwen2-1.5b")
+    pool = EnginePool.replicate(cfg, params, replicas=2, batch_slots=2,
+                                max_len=128)
+    wm = WM()
+    edge = JAXExecutor(ServingEngine(cfg, params, batch_slots=2,
+                                     max_len=128),
+                       wm, cloud=False, concurrency=1)
+    cloud = JAXExecutor(pool, wm, cloud=True, price_out=3.2e-5)
+    auto = AutoscalePolicy(min_replicas=0, idle_to_zero_s=30.0,
+                           cold_start=ColdStartModel(0.02, 0.02, 0.02))
+    rt = ServingRuntime(edge, cloud, StaticPolicy(1),
+                        planner=SyntheticPlanner(),
+                        config=ServingConfig(max_inflight=4, pump=True,
+                                             autoscale=auto))
+    rep = rt.serve(gen_benchmark("gpqa", 3))
+    assert rep.n == 3
+    assert all(r is not None and len(r.results) == r.dag.n
+               for r in rep.results)
+    assert rt.cloud.engine.autoscaler.counters["pokes"] >= 1
+    assert rep.stats["cloud_autoscale"]["promotions"] >= 1
+
+
+# ---- config-path pool plumbing errors ----------------------------------
+
+def test_replicas_config_requires_engine_backed_cloud():
+    """ServingConfig(replicas=R) over an analytic cloud executor fails
+    fast with a clear message instead of duck-typing its way into a
+    crash mid-serve."""
+    from repro.core.hybridflow import Pipeline
+    from repro.serving.runtime import ServingConfig
+    pipe = Pipeline()
+    with pytest.raises(ValueError, match="engine-backed"):
+        ServingRuntime(pipe.edge, pipe.cloud, StaticPolicy(1),
+                       planner=pipe.planner,
+                       config=ServingConfig(replicas=2))
+
+
+def test_autoscale_config_requires_pool_backed_cloud(model_zoo):
+    """autoscale= without a pooled cloud (no replicas=) is a config
+    error, not a silent no-op."""
+    from repro.core.planner import SyntheticPlanner
+    from repro.data.tasks import WorldModel as WM
+    from repro.serving.pool import AutoscalePolicy
+    from repro.serving.runtime import ServingConfig
+    cfg, params = model_zoo("qwen2-1.5b")
+    cloud = JAXExecutor(ServingEngine(cfg, params, batch_slots=2,
+                                      max_len=64),
+                        WM(), cloud=True)
+    edge = JAXExecutor(ServingEngine(cfg, params, batch_slots=2,
+                                     max_len=64),
+                       WM(), cloud=False)
+    with pytest.raises(ValueError, match="EnginePool"):
+        ServingRuntime(edge, cloud, StaticPolicy(1),
+                       planner=SyntheticPlanner(),
+                       config=ServingConfig(autoscale=AutoscalePolicy()))
+
+
+# ---- EngineLike protocol -----------------------------------------------
+
+def test_engine_like_protocol_instances(model_zoo):
+    """Both engine backings satisfy the explicit protocol JAXExecutor
+    types against; an arbitrary object does not."""
+    from repro.serving import EngineLike
+    cfg, params = model_zoo("qwen2-1.5b")
+    eng = ServingEngine(cfg, params, batch_slots=2, max_len=64)
+    pool = EnginePool.replicate(cfg, params, replicas=2, batch_slots=2,
+                                max_len=64)
+    assert isinstance(eng, EngineLike)
+    assert isinstance(pool, EngineLike)
+    assert not isinstance(object(), EngineLike)
+    # the executor front door exposes the same saturation answer either
+    # backing gives
+    ex = JAXExecutor(pool, None, cloud=True)
+    assert ex.saturated() == pool.saturated() is False

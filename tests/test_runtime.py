@@ -1,6 +1,8 @@
 """Multi-query serving runtime: concurrent==sequential result equivalence,
 global-budget exhaustion without deadlock, fair admission, KV-slot reuse,
-order-stable same-tick completion observations."""
+order-stable same-tick completion observations, the ServingConfig surface
+(incl. the legacy-kwarg deprecation shim), and open-loop timed admission
+(arrivals / serve_trace) with TTFT and queue-wait reporting."""
 import numpy as np
 import pytest
 
@@ -162,14 +164,16 @@ def test_runtime_report_throughput_beats_sequential():
     router, _ = train_default_router(n_queries=60, epochs=20)
     pipe = Pipeline()
     qs = gen_benchmark("gpqa", 16)
+    from repro.serving.runtime import ServingConfig
     rt_c = ServingRuntime(pipe.edge, pipe.cloud,
                           HybridFlowPolicy(router, wm=pipe.wm),
-                          planner=pipe.planner, max_inflight=8)
+                          planner=pipe.planner,
+                          config=ServingConfig(max_inflight=8))
     conc = rt_c.serve(qs)
     rt_s = ServingRuntime(pipe.edge, pipe.cloud,
                           HybridFlowPolicy(router, wm=pipe.wm),
                           planner=pipe.planner)
-    seq = rt_s.serve_sequential(qs)
+    seq = rt_s.serve(qs, mode="sequential")
     assert conc.stats["peak_inflight"] == 8
     assert conc.n == seq.n == 16
     assert conc.qps > seq.qps
@@ -180,16 +184,17 @@ def test_runtime_report_throughput_beats_sequential():
 def test_empty_batch_and_zero_budget():
     """Runtime edge cases: an empty batch reports cleanly, and a zero
     global cap means no cloud budget at all (exhausted before spend)."""
-    from repro.serving.runtime import ServingRuntime
+    from repro.serving.runtime import ServingConfig, ServingRuntime
     pipe = Pipeline()
     rt = ServingRuntime(pipe.edge, pipe.cloud, RandomPolicy(0.5),
                         planner=pipe.planner)
-    for rep in (rt.serve([]), rt.serve_sequential([])):
+    for rep in (rt.serve([]), rt.serve([], mode="sequential")):
         assert rep.n == 0
         assert rep.qps == 0.0 and rep.p99_latency == 0.0
         assert "0 queries" in rep.summary()
     rt0 = ServingRuntime(pipe.edge, pipe.cloud, StaticPolicy(1),
-                         planner=pipe.planner, global_k_max=0.0)
+                         planner=pipe.planner,
+                         config=ServingConfig(global_k_max=0.0))
     rep = rt0.serve(gen_benchmark("gpqa", 3))
     assert rep.api_cost == 0.0
     assert rep.stats["forced_edge"] == sum(len(r.results)
@@ -277,7 +282,7 @@ def test_fleet_pump_overlaps_real_engines(model_zoo):
     never outcomes (batch rows are independent)."""
     from repro.core.planner import SyntheticPlanner
     from repro.serving.engine import JAXExecutor, ServingEngine
-    from repro.serving.runtime import ServingRuntime
+    from repro.serving.runtime import ServingConfig, ServingRuntime
     cfg, params = model_zoo("qwen2-1.5b")
     wm = WorldModel()
 
@@ -288,15 +293,15 @@ def test_fleet_pump_overlaps_real_engines(model_zoo):
         cloud = JAXExecutor(cloud_e, wm, cloud=True, concurrency=4,
                             price_out=3.2e-5)
         rt = ServingRuntime(edge, cloud, StaticPolicy(1),
-                            planner=SyntheticPlanner(), max_inflight=4,
-                            pump=pump)
+                            planner=SyntheticPlanner(),
+                            config=ServingConfig(max_inflight=4, pump=pump))
         return rt, edge_e, cloud_e
 
     qs = gen_benchmark("gpqa", 4)
     rt_p, _, cloud_e = build(True)
     pumped = rt_p.serve(qs)
     rt_s, _, _ = build(False)
-    seq = rt_s.serve_sequential(qs)
+    seq = rt_s.serve(qs, mode="sequential")
     # real co-residency: >= 2 subtasks decoding in the same micro-batches
     assert cloud_e.stats["peak_active"] >= 2
     # no per-request full-cache prefill: every admitted request went
@@ -322,7 +327,7 @@ def test_kv_slots_reused_across_queries(model_zoo):
     bounded KV pool; slots are recycled, never grown."""
     from repro.core.planner import SyntheticPlanner
     from repro.serving.engine import JAXExecutor, ServingEngine
-    from repro.serving.runtime import ServingRuntime
+    from repro.serving.runtime import ServingConfig, ServingRuntime
     cfg, params = model_zoo("qwen2-1.5b")
     wm = WorldModel()
     engine = ServingEngine(cfg, params, batch_slots=2, max_len=128)
@@ -331,7 +336,8 @@ def test_kv_slots_reused_across_queries(model_zoo):
     cloud = JAXExecutor(cloud_engine, wm, cloud=True, concurrency=2,
                         price_out=3.2e-5)
     rt = ServingRuntime(edge, cloud, RandomPolicy(0.5),
-                        planner=SyntheticPlanner(), max_inflight=4)
+                        planner=SyntheticPlanner(),
+                        config=ServingConfig(max_inflight=4))
     report = rt.serve(gen_benchmark("gpqa", 4))
     assert report.n == 4
     n_subtasks = sum(len(r.results) for r in report.results)
@@ -342,3 +348,162 @@ def test_kv_slots_reused_across_queries(model_zoo):
         assert eng.stats["peak_active"] <= eng.slots
         if eng.stats["requests"] > eng.slots:
             assert eng.stats["slot_reuses"] >= eng.stats["requests"] - eng.slots
+
+
+# ---- ServingConfig surface + deprecation shim --------------------------
+
+def test_serving_config_shim_maps_legacy_kwargs():
+    """The pre-redesign flat kwargs still work for one release: they warn
+    and land on the same frozen ServingConfig the config= path builds."""
+    from repro.serving.runtime import ServingConfig, ServingRuntime
+    pipe = Pipeline()
+    with pytest.warns(DeprecationWarning, match="ServingConfig"):
+        rt = ServingRuntime(pipe.edge, pipe.cloud, StaticPolicy(0),
+                            planner=pipe.planner, max_inflight=3,
+                            global_k_max=0.5, spill_to_edge=True)
+    assert rt.config == ServingConfig(max_inflight=3, global_k_max=0.5,
+                                      spill_to_edge=True)
+    assert rt.max_inflight == 3 and rt.spill_to_edge is True
+
+
+def test_serving_config_rejects_unknown_and_mixed_kwargs():
+    from repro.serving.runtime import ServingConfig, ServingRuntime
+    pipe = Pipeline()
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        ServingRuntime(pipe.edge, pipe.cloud, StaticPolicy(0),
+                       planner=pipe.planner, bogus_knob=1)
+    with pytest.raises(TypeError, match="config="):
+        ServingRuntime(pipe.edge, pipe.cloud, StaticPolicy(0),
+                       planner=pipe.planner, config=ServingConfig(),
+                       max_inflight=3)
+
+
+def test_shim_serves_identically_to_config_path():
+    """A shimmed runtime and a config= runtime produce the same report
+    for the same closed-loop batch (the shim only relocates knobs)."""
+    from repro.serving.runtime import ServingConfig, ServingRuntime
+    pipe = Pipeline()
+    qs = gen_benchmark("gpqa", 6)
+    rt_c = ServingRuntime(pipe.edge, pipe.cloud, StaticPolicy(1),
+                          planner=pipe.planner,
+                          config=ServingConfig(max_inflight=4))
+    with pytest.warns(DeprecationWarning):
+        rt_l = ServingRuntime(pipe.edge, pipe.cloud, StaticPolicy(1),
+                              planner=pipe.planner, max_inflight=4)
+    a, b = rt_c.serve(qs), rt_l.serve(qs)
+    assert a.makespan == b.makespan
+    for ra, rb in zip(a.results, b.results):
+        _assert_same_result(ra, rb)
+
+
+def test_serve_dispatcher_validation():
+    from repro.serving.runtime import ServingRuntime
+    pipe = Pipeline()
+    rt = ServingRuntime(pipe.edge, pipe.cloud, StaticPolicy(0),
+                        planner=pipe.planner)
+    qs = gen_benchmark("gpqa", 2)
+    with pytest.raises(ValueError, match="mode='fleet'"):
+        rt.serve(qs, arrivals=[0.0, 0.0], mode="sequential")
+    with pytest.raises(ValueError, match="unknown serve mode"):
+        rt.serve(qs, mode="bogus")
+    with pytest.raises(ValueError, match="arrival"):
+        rt.serve(qs, arrivals=[0.0])          # length mismatch
+
+
+# ---- open-loop timed admission -----------------------------------------
+
+def test_open_loop_t0_is_bit_identical_to_closed_loop():
+    """arrivals=[0]*n must take the exact legacy control flow: every
+    per-query result and the fleet makespan match the closed loop."""
+    from repro.serving.runtime import ServingConfig, ServingRuntime
+
+    def run(arrivals):
+        pipe = Pipeline()
+        rt = ServingRuntime(pipe.edge, pipe.cloud, StaticPolicy(1),
+                            planner=pipe.planner,
+                            config=ServingConfig(max_inflight=4))
+        qs = gen_benchmark("gpqa", 8)
+        return rt.serve(qs) if arrivals is None \
+            else rt.serve(qs, arrivals=arrivals)
+
+    closed = run(None)
+    open0 = run([0.0] * 8)
+    assert open0.makespan == closed.makespan
+    for a, b in zip(closed.results, open0.results):
+        _assert_same_result(a, b)
+        assert abs(a.latency - b.latency) < 1e-12
+    # the open-loop run reports traffic metadata, the closed loop none
+    assert closed.trace is None
+    assert open0.trace is not None and open0.trace["n"] == 8
+    assert all(r.arrival == 0.0 and r.queue_wait >= 0.0
+               for r in open0.results)
+
+
+def test_open_loop_staggered_arrivals_gate_admission():
+    """Queries cannot start before they arrive: completion time >= its
+    arrival + work, TTFT/queue percentiles populate, and a wide-open
+    fleet admits each query exactly at its arrival (zero queue wait)."""
+    from repro.serving.runtime import ServingConfig, ServingRuntime
+    pipe = Pipeline()
+    rt = ServingRuntime(pipe.edge, pipe.cloud, StaticPolicy(0),
+                        planner=pipe.planner,
+                        config=ServingConfig(max_inflight=None))
+    qs = gen_benchmark("gpqa", 5)
+    arrivals = [0.0, 2.0, 4.0, 6.0, 8.0]
+    rep = rt.serve(qs, arrivals=arrivals)
+    assert rep.n == 5
+    for r, t in zip(rep.results, arrivals):
+        assert r.arrival == t
+        assert r.ttft > 0.0
+        assert r.queue_wait < 1e-9        # nothing to wait on
+    assert rep.p99_ttft >= rep.p50_ttft > 0.0
+    assert rep.trace["offered_rps"] > 0
+    # arrivals stretch the fleet window beyond the closed-loop makespan
+    assert rep.makespan >= 8.0
+    assert "offered" in rep.summary() and "ttft" in rep.summary()
+
+
+def test_open_loop_overload_queues_late_queries():
+    """A 1-inflight fleet with simultaneous late arrivals: later queries
+    wait their turn — queue_wait grows monotonically along the backlog."""
+    from repro.serving.runtime import ServingConfig, ServingRuntime
+    pipe = Pipeline()
+    rt = ServingRuntime(pipe.edge, pipe.cloud, StaticPolicy(0),
+                        planner=pipe.planner,
+                        config=ServingConfig(max_inflight=1))
+    qs = gen_benchmark("gpqa", 4)
+    rep = rt.serve(qs, arrivals=[0.0, 0.1, 0.1, 0.1])
+    waits = [r.queue_wait for r in rep.results]
+    assert waits[1] < waits[2] < waits[3]
+    assert all(r.ttft >= r.queue_wait for r in rep.results)
+
+
+def test_serve_trace_end_to_end_with_real_engines(model_zoo):
+    """serve_trace through the pumped driver and real JAX engines: timed
+    admission holds queries back on the wall clock and every query still
+    completes with populated TTFT."""
+    from repro.core.planner import SyntheticPlanner
+    from repro.serving.engine import JAXExecutor, ServingEngine
+    from repro.serving.runtime import ServingConfig, ServingRuntime
+    from repro.serving.traffic import Trace
+    cfg, params = model_zoo("qwen2-1.5b")
+    wm = WorldModel()
+    edge = JAXExecutor(ServingEngine(cfg, params, batch_slots=2,
+                                     max_len=128),
+                       wm, cloud=False, concurrency=1)
+    cloud = JAXExecutor(ServingEngine(cfg, params, batch_slots=4,
+                                      max_len=128),
+                        wm, cloud=True, price_out=3.2e-5)
+    rt = ServingRuntime(edge, cloud, StaticPolicy(1),
+                        planner=SyntheticPlanner(),
+                        config=ServingConfig(max_inflight=4, pump=True))
+    trace = Trace(arrivals=(0.0, 0.3, 0.6), duration=1.0, label="tiny")
+    rep = rt.serve_trace(trace, gen_benchmark("gpqa", 3))
+    assert rep.n == 3
+    assert all(r is not None and len(r.results) == r.dag.n
+               for r in rep.results)
+    for r, t in zip(rep.results, trace.arrivals):
+        assert r.arrival == t
+        assert r.ttft > 0.0
+    assert rep.trace["label"] == "tiny"
+    assert rep.trace["offered_rps"] == pytest.approx(3.0)

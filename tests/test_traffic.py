@@ -1,0 +1,100 @@
+"""Arrival-trace generator: seeded determinism, rate fidelity, phase
+ramps, burst/gap shapes, wall-clock scaling, JSON replay round-trip."""
+import json
+
+import pytest
+
+from repro.serving.traffic import Phase, Trace, day_cycle
+
+
+def test_poisson_deterministic_and_rate_accurate():
+    """Same seed → identical arrivals; long-horizon mean RPS within 5%
+    of target (the same invariant check_bench gates in CI)."""
+    a = Trace.poisson(4.0, 600.0, seed=7)
+    b = Trace.poisson(4.0, 600.0, seed=7)
+    assert a.arrivals == b.arrivals
+    assert a.n == len(a) > 0
+    assert abs(a.mean_rps - 4.0) / 4.0 < 0.05
+    assert all(0.0 <= t <= 600.0 for t in a.arrivals)
+    assert list(a.arrivals) == sorted(a.arrivals)
+    # different seed → different draw
+    assert Trace.poisson(4.0, 600.0, seed=8).arrivals != a.arrivals
+
+
+def test_phase_ramp_rates_and_validation():
+    ph = Phase(duration=10.0, rps=1.0, rps_end=3.0)
+    assert ph.rate_at(0.0) == 1.0
+    assert ph.rate_at(5.0) == pytest.approx(2.0)
+    assert ph.peak == 3.0
+    assert ph.mean_rps == pytest.approx(2.0)
+    with pytest.raises(ValueError):
+        Phase(duration=0.0, rps=1.0)
+    with pytest.raises(ValueError):
+        Phase(duration=1.0, rps=-0.5)
+
+
+def test_day_cycle_peak_density():
+    """The day-cycle trace concentrates arrivals in its peak phase:
+    per-second density at the peak beats the trough by the rps ratio's
+    order of magnitude."""
+    phases = day_cycle(base_rps=0.5, peak_rps=4.0, duration=1000.0)
+    assert sum(p.duration for p in phases) == pytest.approx(1000.0)
+    tr = Trace.from_phases(phases, seed=11)
+    trough_end = phases[0].duration
+    peak_start = phases[0].duration + phases[1].duration
+    peak_end = peak_start + phases[2].duration
+    trough = sum(1 for t in tr.arrivals if t < trough_end) / trough_end
+    peak = sum(1 for t in tr.arrivals
+               if peak_start <= t < peak_end) / phases[2].duration
+    assert peak > 2 * trough
+
+
+def test_bursty_gap_is_empty_and_burst_is_dense():
+    tr = Trace.bursty(base_rps=0.5, duration=100.0, burst_rps=8.0,
+                      burst_at=20.0, burst_s=5.0, gap_at=50.0, gap_s=30.0,
+                      seed=5)
+    assert not [t for t in tr.arrivals if 50.0 <= t < 80.0]
+    assert tr.largest_gap() >= 30.0
+    burst = [t for t in tr.arrivals if 20.0 <= t < 25.0]
+    assert len(burst) / 5.0 > 2 * 0.5   # well above base rate
+
+
+def test_scaled_compresses_wall_clock_not_counts():
+    tr = Trace.bursty(base_rps=0.2, duration=60.0, burst_rps=1.0,
+                      burst_at=10.0, burst_s=5.0, seed=3)
+    half = tr.scaled(0.5)
+    assert half.n == tr.n
+    assert half.duration == pytest.approx(30.0)
+    assert half.arrivals == tuple(pytest.approx(t * 0.5)
+                                  for t in tr.arrivals)
+    assert half.mean_rps == pytest.approx(2 * tr.mean_rps)
+    assert half.target_rps == pytest.approx(2 * tr.target_rps)
+    assert half.label.endswith("@x0.5")
+
+
+def test_json_round_trip_replays_identically(tmp_path):
+    tr = Trace.poisson(2.0, 30.0, seed=1, label="rt")
+    path = tmp_path / "trace.json"
+    tr.to_json(path)
+    back = Trace.from_json(path)
+    assert back.arrivals == tr.arrivals
+    assert (back.duration, back.seed, back.label) == (30.0, 1, "rt")
+    assert back.target_rps == tr.target_rps
+    # string form round-trips too, and the full value (incl. phase
+    # metadata) survives — Trace is a frozen dataclass so == is exact
+    again = Trace.from_json(tr.to_json())
+    assert again == tr
+    assert again.phases == tr.phases != ()
+    assert json.loads(tr.to_json())["label"] == "rt"
+
+
+def test_trace_validation():
+    with pytest.raises(ValueError):
+        Trace.poisson(-1.0, 10.0, seed=0)
+    with pytest.raises(ValueError):
+        Trace.poisson(1.0, 0.0, seed=0)
+    with pytest.raises(ValueError):
+        Trace(arrivals=(1.0,), duration=10.0).scaled(0.0)
+    # unsorted input is normalised, never rejected
+    tr = Trace(arrivals=(3.0, 1.0, 2.0), duration=5.0)
+    assert tr.arrivals == (1.0, 2.0, 3.0)
