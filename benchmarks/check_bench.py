@@ -6,7 +6,7 @@ mode regresses beyond tolerance — qps for the scheduler/runtime rows,
 ``prefill_tok_per_s`` / ``decode_tok_per_s`` for the kernel-microbench
 rows.
 
-Rows come in three classes; ``--only`` selects analytic vs everything
+Rows come in four classes; ``--only`` selects analytic vs everything
 measured on a wall clock:
 
 * **analytic** — simulated-clock scheduler/runtime rows (``sequential``,
@@ -24,6 +24,15 @@ measured on a wall clock:
   kernel no slower than its jnp reference row (``prefill-pallas``
   ms_per_call <= ``prefill-ref``) — the regression this gate exists to
   catch; the decode pair prints a warning when the kernel loses.
+* **prefix-reuse** — the ``prefix-reuse-off`` / ``prefix-reuse-on``
+  KV-reuse fidelity rows. Their metrics (``savings_pct``, token
+  counters) are pure functions of the prompt set, so they ride the
+  analytic (gating) step: the on-row's ``savings_pct`` diffs against
+  baseline at the analytic tolerance, and two cross-row gates inside
+  the current run are exact — reuse-on must not decode more tokens than
+  reuse-off, and must keep skipping >= 40% of the no-reuse prefill
+  work. (The live-fleet twins ``real-prefix-*`` are nightly, warn-only
+  real rows and stay out of the committed baseline.)
 * **real** — ``real-*`` fleet rows measured on whatever shared runner
   ran them. Too noisy to gate: a regression prints a WARNING in the log
   without failing the job, so the step no longer needs
@@ -57,9 +66,14 @@ def _load(path):
 
 
 def _metric(row):
-    """(name, value) of the row's throughput metric, or (None, None)."""
+    """(name, value) of the row's throughput metric, or (None, None).
+
+    ``savings_pct`` serves the prefix-reuse-on row: it is a pure
+    function of the prompt set (no clock anywhere), so it diffs at the
+    analytic tolerance. The reuse-off row has no positive metric and is
+    deliberately skipped — its job is the cross-row gates below."""
     for name in ("qps", "prefill_tok_per_s", "decode_tok_per_s",
-                 "measured_rps"):
+                 "measured_rps", "savings_pct"):
         v = row.get(name)
         if isinstance(v, (int, float)) and v > 0:
             return name, float(v)
@@ -71,11 +85,16 @@ def _row_class(mode: str) -> str:
         return "microbench"
     if mode.startswith("real-"):
         return "real"
+    if mode.startswith("prefix-reuse"):
+        return "prefix-reuse"
     return "analytic"
 
 
 def _is_wallclock(mode: str) -> bool:
-    return _row_class(mode) != "analytic"
+    # prefix-reuse rows carry deterministic token-count metrics, so they
+    # ride the analytic (gating) step even though the section also
+    # records a wall_s for the log
+    return _row_class(mode) not in ("analytic", "prefix-reuse")
 
 
 def _kernel_vs_ref(cur, pallas_mode, ref_mode):
@@ -124,7 +143,8 @@ def check(current: str, baseline: str, tolerance: float,
         compared += 1
         delta = (cval - bval) / bval
         cls = _row_class(mode)
-        tol = tolerance if cls == "analytic" else real_tolerance
+        tol = tolerance if cls in ("analytic", "prefix-reuse") \
+            else real_tolerance
         bad = delta < -tol
         flag = ""
         if bad and cls == "real":
@@ -172,6 +192,36 @@ def check(current: str, baseline: str, tolerance: float,
                 if err > 0.05:
                     regressions.append(("trace-gen!=target", "measured_rps",
                                         t, m, err))
+
+    # cross-row gates inside the CURRENT run, prefix-reuse side: both
+    # token counters are deterministic, so these are exact invariants,
+    # not tolerance diffs. Reuse must (a) never change what gets decoded
+    # (same tokens out — the bit-identity contract's cheap observable)
+    # and (b) keep skipping at least 40% of the no-reuse prefill work on
+    # the shared-prefix fleet.
+    if only != "wallclock":
+        on, off = selected.get("prefix-reuse-on"), \
+            selected.get("prefix-reuse-off")
+        if on is not None and off is not None:
+            t_on, t_off = on.get("tokens_out"), off.get("tokens_out")
+            if isinstance(t_on, (int, float)) \
+                    and isinstance(t_off, (int, float)):
+                verdict = "OK" if t_on <= t_off else "FAIL"
+                print(f"\nprefix reuse tokens out: on {t_on:.0f} vs "
+                      f"off {t_off:.0f} ({verdict})")
+                if t_on > t_off:
+                    regressions.append(("prefix-on>off-tokens",
+                                        "tokens_out", t_off, t_on,
+                                        (t_on - t_off) / max(t_off, 1)))
+            sp = on.get("savings_pct")
+            if isinstance(sp, (int, float)):
+                verdict = "OK" if sp >= 40.0 else "FAIL"
+                print(f"prefix reuse savings: {sp:.1f}% of prefill "
+                      f"tokens skipped (floor 40%, {verdict})")
+                if sp < 40.0:
+                    regressions.append(("prefix-savings<40%",
+                                        "savings_pct", 40.0, sp,
+                                        (sp - 40.0) / 40.0))
 
     # a gate that compares nothing gates nothing: renamed/dropped modes
     # must fail loudly instead of silently passing the check

@@ -45,6 +45,17 @@ and the post-gap arrival pokes it back to warm. A separate analytic
 ``trace-gen`` row records the Poisson generator's measured mean RPS
 against its target (``check_bench`` gates it within 5%).
 
+Prefix-reuse section: a shared-system-prompt fleet shaped like the
+executor's DAG prompts runs reuse-off then reuse-on through a direct
+engine in deterministic subtask waves (``prefix-reuse-off`` /
+``prefix-reuse-on`` rows). Bit-identity and exact token accounting
+hard-fail inside the section; the rows' ``savings_pct`` / ``hit_rate``
+metrics are pure functions of the prompt set, so they GATE in CI like
+the analytic rows (reuse must keep skipping >= 40% of prefill work).
+``--prefix-fleet N`` adds the heavy live-runtime twin (``real-prefix-*``
+rows, nightly): the full pumped DAG fleet with scheduler prefix hints,
+warn-only like every real-* row.
+
 Two final sections microbench the serving attention ops themselves —
 jnp reference vs Pallas kernel for ragged chunked prefill
 (``prefill-ref`` / ``prefill-pallas`` rows) and for batched decode
@@ -345,6 +356,150 @@ def run_degraded(n_queries=12, bench="gpqa", *, arch="qwen2-1.5b",
     return rows, rows[1]["overhead_pct"]
 
 
+def run_prefix(n_queries=6, *, arch="qwen2-1.5b", subtasks=4,
+               max_new=8):
+    """KV prefix-reuse fidelity + savings section (GATES in CI).
+
+    A shared-system-prompt fleet shaped like the executor's DAG prompts
+    (per-query context + per-subtask tail) runs twice through a direct
+    engine — reuse off, then on — submitted in deterministic subtask
+    waves (wave j = subtask j of every query; ``batch_slots=n_queries``
+    keeps each query on its own slot, so the reuse pattern is a pure
+    function of the prompts, not of timing). The section hard-fails
+    unless greedy outputs are bit-identical and the token accounting is
+    exact (``off prefill == on prefill + saved``); the emitted
+    ``prefix-reuse-off`` / ``prefix-reuse-on`` rows carry the
+    deterministic savings/hit-rate metrics ``check_bench`` gates on."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.models import model as M
+    from repro.serving.engine import ServingEngine
+
+    cfg = get_config(arch).reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    # per-query shared context ~64 tokens (4 full PREFIX_BLOCKs); tails
+    # ~25 tokens — reuse-on should skip >= 40% of prefill work
+    ctx = {q: (f"[query {q:02d}] You are a careful assistant; reason "
+               f"step by step about case {q:02d}. ")
+           for q in range(n_queries)}
+    waves = [[ctx[q] + f"subtask {j}: analyze aspect {j} of it"
+              for q in range(n_queries)] for j in range(subtasks)]
+
+    def serve(reuse: bool):
+        eng = ServingEngine(cfg, params, batch_slots=n_queries, max_len=160,
+                            prefill_chunk=32, prefix_reuse=reuse)
+        outs = []
+        t0 = time.perf_counter()
+        for wave in waves:
+            reqs = [eng.submit(p, max_new_tokens=max_new) for p in wave]
+            eng.run_until_done()
+            outs += [tuple(r.output_ids) for r in reqs]
+        return outs, eng.stats, time.perf_counter() - t0
+
+    serve(True)                                # pay jit compiles
+    serve(False)
+    off_out, off, off_s = serve(False)
+    on_out, on, on_s = serve(True)
+    assert on_out == off_out, \
+        "prefix reuse broke bit-identity on the shared-prefix fleet"
+    assert off["prefill_tokens"] == \
+        on["prefill_tokens"] + on["prefill_tokens_saved"], \
+        (off["prefill_tokens"], on["prefill_tokens"],
+         on["prefill_tokens_saved"])
+    n_req = n_queries * subtasks
+    rows = []
+    for mode, st, wall in (("prefix-reuse-off", off, off_s),
+                           ("prefix-reuse-on", on, on_s)):
+        saved = st["prefill_tokens_saved"]
+        rows.append({
+            "mode": mode,
+            "queries": n_queries,
+            "requests": n_req,
+            "wall_s": wall,
+            "tokens_out": st["tokens_out"],
+            "prefill_tokens": st["prefill_tokens"],
+            "prefill_tokens_saved": saved,
+            "prefix_hits": st["prefix_hits"],
+            "prefix_copies": st["prefix_copies"],
+            # deterministic gating metrics: fraction of the no-reuse
+            # prefill work skipped, and hits per reusable request
+            "savings_pct": 100.0 * saved / max(off["prefill_tokens"], 1),
+            "hit_rate": st["prefix_hits"] / max(n_req - n_queries, 1),
+        })
+    return rows, rows[1]["savings_pct"]
+
+
+def run_prefix_fleet(n_queries=6, bench="gpqa", *, arch="qwen2-1.5b"):
+    """Heavy live-runtime twin of :func:`run_prefix` (nightly): the full
+    ServingRuntime DAG fleet — planner, pump loop, DAG prefix hints,
+    pool-less executors — served with reuse on vs off. Answers must
+    match exactly (greedy outputs depend only on the prompt, so the
+    per-subtask answer map is dispatch-order-independent); the
+    ``real-prefix-*`` rows record the wall-clock and prefill-token
+    effect at fleet scale and WARN (never gate) like every real-* row."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.core.planner import SyntheticPlanner
+    from repro.data.tasks import WorldModel, gen_benchmark
+    from repro.models import model as M
+    from repro.serving.engine import JAXExecutor, ServingEngine
+
+    cfg = get_config(arch).reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    wm = WorldModel()
+    qs = gen_benchmark(bench, n_queries)
+
+    def serve(reuse: bool):
+        edge_e = ServingEngine(cfg, params, batch_slots=2, max_len=160,
+                               prefill_chunk=64, prefix_reuse=reuse)
+        cloud_e = ServingEngine(cfg, params, batch_slots=4, max_len=160,
+                                prefill_chunk=64, prefix_reuse=reuse,
+                                seed=1)
+        edge = JAXExecutor(edge_e, wm, cloud=False, concurrency=1)
+        cloud = JAXExecutor(cloud_e, wm, cloud=True, price_out=3.2e-5)
+        rt = ServingRuntime(edge, cloud, _HashRoutePolicy(),
+                            planner=SyntheticPlanner(),
+                            config=ServingConfig(max_inflight=n_queries,
+                                                 pump=True))
+        rep = rt.serve(qs)
+        answers = sorted((r.qid, s.sid, s.answer) for r in rep.results
+                         for s in r.results.values())
+        return rep, answers, edge_e, cloud_e
+
+    serve(True)                                # pay jit compiles
+    serve(False)
+    rows = []
+    maps = {}
+    for mode, reuse in (("real-prefix-off", False), ("real-prefix-on", True)):
+        rep, answers, edge_e, cloud_e = serve(reuse)
+        maps[mode] = answers
+        rows.append({
+            "mode": mode,
+            "queries": n_queries,
+            "qps": rep.n / rep.wall_s if rep.wall_s > 0 else 0.0,
+            "p50": rep.p50_latency,
+            "p99": rep.p99_latency,
+            "wall_s": rep.wall_s,
+            "prefill_tokens": (edge_e.stats["prefill_tokens"]
+                               + cloud_e.stats["prefill_tokens"]),
+            "prefill_tokens_saved":
+                (edge_e.stats["prefill_tokens_saved"]
+                 + cloud_e.stats["prefill_tokens_saved"]),
+            "prefix_hits": (edge_e.stats["prefix_hits"]
+                            + cloud_e.stats["prefix_hits"]),
+        })
+    assert maps["real-prefix-on"] == maps["real-prefix-off"], \
+        "prefix reuse changed a fleet answer (bit-identity broken)"
+    saved = rows[1]["prefill_tokens_saved"]
+    return rows, 100.0 * saved / max(rows[0]["prefill_tokens"], 1)
+
+
 def run_trace_gen(*, rps=4.0, duration=600.0, seed=7):
     """Analytic trace-generator fidelity row (gates in CI): a seeded
     Poisson trace at a target RPS must measure within 5% of it over a
@@ -557,6 +712,12 @@ def main():
     ap.add_argument("--openloop-replicas", type=int, default=4,
                     help="elastic cloud pool ceiling for the open-loop "
                          "trace-replay section (0 disables)")
+    ap.add_argument("--prefix-queries", type=int, default=6,
+                    help="KV prefix-reuse fidelity section query count "
+                         "(deterministic, gates in CI; 0 disables)")
+    ap.add_argument("--prefix-fleet", type=int, default=0,
+                    help="heavy live-runtime prefix-reuse fleet query "
+                         "count (nightly; 0 disables)")
     ap.add_argument("--benchmark", default="gpqa")
     ap.add_argument("--json", default="BENCH_serve.json",
                     help="machine-readable output path ('' disables)")
@@ -642,6 +803,26 @@ def main():
               f"ups={r['scale_ups']} downs={r['scale_downs']} "
               f"to_zero={r['scale_to_zero']} pokes={r['pokes']}")
         json_rows += ol_rows
+
+    if args.prefix_queries > 0:
+        px_rows, px_save = run_prefix(args.prefix_queries)
+        C.print_csv("serve_prefix", list(px_rows[0].keys()),
+                    [list(r.values()) for r in px_rows])
+        print(f"\nprefix reuse: {px_save:.1f}% of prefill tokens skipped "
+              f"({px_rows[1]['prefix_hits']} hits, "
+              f"{px_rows[1]['prefix_copies']} cross-slot copies) with "
+              f"bit-identical greedy outputs — CI gates savings >= 40%")
+        json_rows += px_rows
+
+    if args.prefix_fleet > 0:
+        pxf_rows, pxf_save = run_prefix_fleet(args.prefix_fleet,
+                                              args.benchmark)
+        C.print_csv("serve_prefix_fleet", list(pxf_rows[0].keys()),
+                    [list(r.values()) for r in pxf_rows])
+        print(f"\nprefix reuse (live fleet): {pxf_save:.1f}% prefill "
+              f"tokens skipped; wall {pxf_rows[0]['wall_s']:.2f}s off -> "
+              f"{pxf_rows[1]['wall_s']:.2f}s on, same answers")
+        json_rows += pxf_rows
 
     if args.prefill_iters > 0:
         pf_rows = run_prefill_microbench(iters=args.prefill_iters)

@@ -111,6 +111,13 @@ class _Dispatch:
     retries: int = 0           # total failed attempts, both sides
     degraded: bool = False
     not_before: float = 0.0    # backoff gate (fleet-clock seconds)
+    hint: Optional[object] = None  # KV prefix hint (shared-context token
+    #                            ids); computed once at first dispatch and
+    #                            carried — because the dispatch is mutated
+    #                            in place — across retry, cloud→edge
+    #                            spill, and degradation re-dispatch, so a
+    #                            re-routed subtask still lands where its
+    #                            query's context is hot
 
 
 @dataclass
@@ -686,7 +693,14 @@ class FleetScheduler:
         inflight: List[List] = []
 
         def dispatch_action(qs, disp, ex):
-            fut = ex.submit(qs.query, disp.node, qs.results)
+            kw = {}
+            if getattr(ex, "accepts_prefix_hint", False):
+                if disp.hint is None:
+                    # computed once per dispatch; the in-place-mutated
+                    # _Dispatch carries it across retry / spill / degrade
+                    disp.hint = ex.shared_context(qs.query)
+                kw["prefix_hint"] = disp.hint
+            fut = ex.submit(qs.query, disp.node, qs.results, **kw)
             inflight.append([fut, qs, disp, ex, st.clock])
 
         def requeue(qs, disp, delay):

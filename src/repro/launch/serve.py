@@ -11,7 +11,11 @@ continues, and co-scheduled subtasks decode in the same micro-batches
 ``EnginePool`` (least-loaded dispatch, cloud concurrency = replicas x
 slots); ``--no-pump`` forces the old synchronous per-subtask dispatch;
 ``--sequential`` restores the seed's one-query-at-a-time loop;
-``--global-k-max`` caps fleet-wide API spend.
+``--global-k-max`` caps fleet-wide API spend. Cross-request KV prefix
+reuse is ON by default (sibling subtasks share their query's context
+prefix; the final stats line reports hits and prefill tokens skipped)
+— ``--no-prefix-reuse`` disables it, ``--prefix-block`` tunes the hash
+granularity.
 
 Open loop: ``--rps R`` generates a seeded Poisson arrival trace and
 replays it with timed admission (``--trace FILE`` replays a recorded
@@ -84,6 +88,13 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=64,
                     help="prefill chunk length (long prompts never stall "
                          "co-resident decodes)")
+    ap.add_argument("--no-prefix-reuse", action="store_true",
+                    help="disable cross-request KV prefix reuse (on by "
+                         "default: shared block-aligned prompt prefixes "
+                         "seed new slots instead of re-prefilling)")
+    ap.add_argument("--prefix-block", type=int, default=None,
+                    help="prefix-hash block size in tokens (default: "
+                         "kvcache.PREFIX_BLOCK)")
     ap.add_argument("--calibrate", action="store_true",
                     help="enable the LinUCB calibration head")
 
@@ -140,14 +151,18 @@ def main():
     wm = WorldModel()
     edge_cfg = get_config(args.edge_arch).reduced()
     cloud_cfg = get_config(args.cloud_arch).reduced().variant(n_layers=2)
+    from repro.models import kvcache as KV
+    eng_kw = dict(max_len=192, prefill_chunk=args.prefill_chunk,
+                  prefix_reuse=not args.no_prefix_reuse,
+                  prefix_block=args.prefix_block or KV.PREFIX_BLOCK)
     edge_engine = ServingEngine(
         edge_cfg, M.init_params(edge_cfg, jax.random.PRNGKey(0),
                                 dtype=jnp.float32),
-        batch_slots=2, max_len=192, prefill_chunk=args.prefill_chunk)
+        batch_slots=2, **eng_kw)
     cloud_engine = ServingEngine(
         cloud_cfg, M.init_params(cloud_cfg, jax.random.PRNGKey(1),
                                  dtype=jnp.float32),
-        batch_slots=4, max_len=192, prefill_chunk=args.prefill_chunk)
+        batch_slots=4, **eng_kw)
     edge = JAXExecutor(edge_engine, wm, cloud=False, concurrency=1)
     # concurrency derives from engine capacity; with --cloud-replicas the
     # runtime scales this executor out to an EnginePool (replicas x slots)
@@ -226,6 +241,12 @@ def main():
         print(f"per-query recovery: {n_ret} retried attempts, "
               f"{n_deg} degraded subtasks, 0 failed queries")
     cloud_eng = runtime.cloud.engine     # EnginePool when replicas > 1
+    hits = (edge_engine.stats["prefix_hits"]
+            + cloud_eng.stats.get("prefix_hits", 0))
+    saved = (edge_engine.stats["prefill_tokens_saved"]
+             + cloud_eng.stats.get("prefill_tokens_saved", 0))
+    if not args.no_prefix_reuse:
+        print(f"prefix reuse: {hits} hits, {saved} prefill tokens skipped")
     print(f"edge: {edge_engine.stats} | cloud: {cloud_eng.stats}")
     if hasattr(cloud_eng, "occupancy"):
         for o in cloud_eng.occupancy():

@@ -9,9 +9,16 @@ per-request ``pos`` counter: valid slots = min(pos, W).
 """
 from __future__ import annotations
 
-from typing import Optional
+import zlib
+from typing import List, Optional
 
 import jax.numpy as jnp
+import numpy as np
+
+# Token-block granularity for cross-request KV prefix reuse: prefixes are
+# hashed (and shared) in units of this many tokens, so a borrower can only
+# skip prefill for whole blocks it matches exactly.
+PREFIX_BLOCK = 16
 
 
 def cache_len(cfg, shape_seq: int, *, margin: int = 8) -> int:
@@ -92,6 +99,46 @@ def write_chunk(cache_k, cache_v, k, v, slot_idx, pos0, take):
     rows = slot_idx[:, None]                                 # [G, 1]
     cache_k = cache_k.at[rows, cols].set(k, mode="drop")
     cache_v = cache_v.at[rows, cols].set(v, mode="drop")
+    return cache_k, cache_v
+
+
+def prefix_block_hashes(ids, block: int = PREFIX_BLOCK) -> List[int]:
+    """Chained crc32 per full token block: ``hashes[b]`` covers tokens
+    [0, (b+1)*block), so two prompts sharing hash ``b`` share (modulo
+    collisions, which the index resolves by exact token comparison) their
+    whole first ``(b+1)*block`` tokens — a single int per boundary gives
+    longest-prefix lookup without storing every sub-prefix."""
+    n = (len(ids) // block) * block
+    if n == 0:
+        return []
+    arr = np.asarray(ids[:n], np.int32)
+    out, h = [], 0
+    for i in range(0, n, block):
+        h = zlib.crc32(arr[i:i + block].tobytes(), h)
+        out.append(h)
+    return out
+
+
+def copy_prefix(cache_k, cache_v, src_idx, dst_idx, length, width: int):
+    """Batched cross-slot prefix copy on a stacked [L, B, M, KV, hd] pool.
+
+    Row ``g`` copies cache lines [0, length[g]) of pool slot ``src_idx[g]``
+    into slot ``dst_idx[g]`` across every layer at once — one gather plus
+    one drop-mode scatter per cache tensor (the batched dynamic-update
+    idiom of :func:`write_chunk`), regardless of how many borrowers seed
+    this step. ``width`` is the static gather width (>= max(length));
+    lines beyond ``length[g]`` are routed out of bounds and dropped.
+    """
+    M = cache_k.shape[2]
+    G = src_idx.shape[0]
+    assert width <= M, f"copy width {width} exceeds cache lines {M}"
+    src_k = cache_k[:, src_idx, :width]                      # [L,G,W,KV,hd]
+    src_v = cache_v[:, src_idx, :width]
+    cols = jnp.broadcast_to(jnp.arange(width)[None, :], (G, width))
+    cols = jnp.where(cols < length[:, None], cols, M)        # [G, W]
+    rows = dst_idx[:, None]                                  # [G, 1]
+    cache_k = cache_k.at[:, rows, cols].set(src_k, mode="drop")
+    cache_v = cache_v.at[:, rows, cols].set(src_v, mode="drop")
     return cache_k, cache_v
 
 

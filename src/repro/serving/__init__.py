@@ -7,10 +7,9 @@ Surface overview
 * :class:`ServingRuntime` — admit → plan → fleet-execute. Every knob
   lives on the frozen :class:`ServingConfig` value object
   (``ServingRuntime(edge, cloud, policy, planner=..., config=...)``);
-  the pre-redesign flat kwargs (``max_inflight=``, ``pump=``,
-  ``replicas=``, ``retry=``, ``faults=``, …) are accepted for one more
-  release through a deprecation shim that maps them into a config and
-  warns. One dispatcher serves every mode:
+  that is the entire constructor surface — the PR 8 flat-kwargs
+  deprecation shim is gone and any other kwarg raises ``TypeError``.
+  One dispatcher serves every mode:
   ``serve(queries)`` (closed loop), ``serve(queries, mode="sequential")``
   and ``serve(queries, arrivals=trace)`` / ``serve_trace(trace)`` (open
   loop with timed admission) all return the same
@@ -51,6 +50,42 @@ an executor:
 ``ServingEngine`` (one KV slot pool) and ``EnginePool`` (R replicas)
 both declare it — asserted at import time below and checkable at
 runtime via ``isinstance(x, EngineLike)``.
+
+KV prefix-reuse contract
+------------------------
+Dense-decoder engines reuse KV lines across requests whose prompts share
+a prefix (``prefix_reuse=True`` by default on the batched-prefill path):
+
+* **Granularity**: prefixes are hashed per
+  :data:`repro.models.kvcache.PREFIX_BLOCK`-token block (chained crc32);
+  a lease can only skip whole matched blocks, capped one token short of
+  its own prompt (the first sampled token needs the last prompt token's
+  prefill logits). Every hash match is verified token-exact before use,
+  so collisions cannot break bit-identity: greedy reuse-on outputs equal
+  reuse-off outputs token for token.
+* **Lifecycle & eviction pinning**: a slot's prompt is registered when
+  its prefill completes (lines fully written; decode only appends past
+  them) and evicted when the slot is re-leased. A *free* slot whose
+  lines a newly admitted borrower matched is **pinned** — skipped by
+  admission — until the borrower's batched seed copy launches (same
+  step), so a concurrent lease can never overwrite a borrowed prefix
+  mid-copy. A borrower that re-leases its own best source reuses the
+  lines in place (no copy at all).
+* **Pool affinity**: each ``EnginePool`` replica owns its index;
+  ``submit(prefix_hint=...)`` (the fleet scheduler's DAG hint, carried
+  across retry / spill / degradation re-dispatch) breaks least-loaded
+  ties toward the replica holding the longest cached prefix — affinity
+  never outranks load or health.
+* **What failover invalidates**: a dead replica's index dies with its
+  KV pool — failed-over requests restart from the prompt on a survivor
+  and simply re-match whatever that survivor's index holds. Cancelling
+  a mid-prefill request drops its pending seed copy and releases any
+  pin it held; nothing is ever registered for partially written lines.
+
+``stats["prefix_hits"]`` / ``["prefill_tokens_saved"]`` /
+``["prefix_copies"]`` report the reuse win per engine (summed across a
+pool; surfaced as ``edge_``/``cloud_``-prefixed report stats by the
+runtime).
 
 Failure-semantics contract
 --------------------------

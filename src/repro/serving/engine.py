@@ -17,6 +17,15 @@ Hot path (dense decoders — the HybridFlow edge/cloud executor archs):
   ``REPRO_USE_PALLAS=1`` the chunk attention runs the ragged
   chunked-prefill Pallas kernel (``stats["prefill_backend"]`` records
   which backend served the last prefill call).
+* **Cross-request KV prefix reuse** — completed prompts are indexed by
+  chained block hashes (``kvcache.PREFIX_BLOCK`` tokens per block); a new
+  lease that shares a cached block-aligned prefix seeds its slot with ONE
+  batched cross-slot copy (or skips the copy entirely when it re-leases
+  its own source slot) and prefills only the uncovered tail. Matches are
+  verified token-exact, a free source slot is pinned against re-lease
+  until the borrower's copy launches, and at least one tail token always
+  prefills — greedy outputs are bit-identical to the no-reuse path.
+  ``stats["prefix_hits"]``/``["prefill_tokens_saved"]`` report the win.
 * **Device-side batched sampling** — greedy/temperature sampling for all
   live slots happens inside the jitted decode/prefill step (one PRNG key
   array, one [slots] host transfer of sampled ids per step) instead of a
@@ -63,6 +72,7 @@ if TYPE_CHECKING:  # the protocol lives in the package root (no cycle)
 
 from repro.configs.base import ModelConfig
 from repro.data import tokenizer as tok
+from repro.models import kvcache as KV
 from repro.models import model as M
 
 
@@ -132,6 +142,86 @@ def _device_sample(logits, key, temps):
     return jnp.where(temps > 0, sampled, greedy)
 
 
+class _PrefixIndex:
+    """Content-hashed index of the prompt prefixes currently held in the
+    engine's KV slot pool.
+
+    Prefixes are indexed at :data:`repro.models.kvcache.PREFIX_BLOCK`-token
+    granularity with chained crc32 block hashes; a lookup walks the
+    candidate boundaries longest-first and verifies the actual tokens
+    before reporting a match, so hash collisions can never break the
+    bit-identity contract. Entries are registered when a slot's prefill
+    completes (its lines are then fully written and stable — decode only
+    appends past the prompt) and evicted when the slot is re-leased (its
+    lines are about to be overwritten from position 0).
+    """
+
+    def __init__(self, block: int):
+        self.block = block
+        self._slot_ids: Dict[int, tuple] = {}     # slot -> prompt token ids
+        self._slot_hashes: Dict[int, tuple] = {}  # slot -> chained hashes
+        self._by_hash: Dict[int, set] = {}        # chained hash -> slots
+
+    def register(self, slot: int, ids) -> None:
+        self.evict(slot)
+        hs = KV.prefix_block_hashes(ids, self.block)
+        if not hs:
+            return
+        self._slot_ids[slot] = tuple(ids)
+        self._slot_hashes[slot] = tuple(hs)
+        for h in hs:
+            self._by_hash.setdefault(h, set()).add(slot)
+
+    def evict(self, slot: int) -> None:
+        hs = self._slot_hashes.pop(slot, None)
+        self._slot_ids.pop(slot, None)
+        if not hs:
+            return
+        for h in hs:
+            slots = self._by_hash.get(h)
+            if slots is not None:
+                slots.discard(slot)
+                if not slots:
+                    del self._by_hash[h]
+
+    def match(self, ids) -> "tuple[Optional[int], int]":
+        """(slot, n_tokens) of the longest cached block-aligned PROPER
+        prefix of ``ids`` — capped at ``len(ids) - 1`` so at least one
+        tail token always prefills (the first sampled token comes from
+        the last prompt token's prefill logits)."""
+        hs = KV.prefix_block_hashes(ids, self.block)
+        usable = min(len(hs), (len(ids) - 1) // self.block)
+        for b in range(usable, 0, -1):
+            slots = self._by_hash.get(hs[b - 1])
+            if not slots:
+                continue
+            n = b * self.block
+            want = tuple(ids[:n])
+            for slot in sorted(slots):
+                if self._slot_ids.get(slot, ())[:n] == want:
+                    return slot, n
+        return None, 0
+
+
+# Jitted cross-slot prefix-copy steps, one per static gather width (the
+# same power-of-two bucket ladder as chunk widths). Module-level so pool
+# replicas and fleet reruns share compiles; _track_retraces folds their
+# signature counts into stats["jit_retraces"].
+_COPY_JITS: Dict[int, object] = {}
+
+
+def _jit_copy(width: int):
+    fn = _COPY_JITS.get(width)
+    if fn is None:
+        def copy_fn(cache, src_idx, dst_idx, length):
+            k, v = KV.copy_prefix(cache["k"], cache["v"], src_idx, dst_idx,
+                                  length, width)
+            return dict(cache, k=k, v=v)
+        fn = jax.jit(copy_fn, donate_argnums=(0,))
+        _COPY_JITS[width] = fn
+    return fn
+
+
 @functools.lru_cache(maxsize=64)
 def _jit_steps(cfg: ModelConfig, max_len: int, use_pallas: bool = False):
     """Fused decode+sample and chunk-prefill+sample steps, jitted once per
@@ -176,7 +266,9 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
                  max_len: int = 512, dtype=jnp.float32, seed: int = 0,
                  prefill_chunk: Optional[int] = None,
-                 batched_prefill: bool = True):
+                 batched_prefill: bool = True,
+                 prefix_reuse: bool = True,
+                 prefix_block: int = KV.PREFIX_BLOCK):
         self.cfg = cfg
         self.params = params
         self.slots = batch_slots
@@ -188,7 +280,9 @@ class ServingEngine:
         # the family gate, so keep the caller's value here
         self._ctor_kw = dict(batch_slots=batch_slots, max_len=max_len,
                              dtype=dtype, prefill_chunk=prefill_chunk,
-                             batched_prefill=batched_prefill)
+                             batched_prefill=batched_prefill,
+                             prefix_reuse=prefix_reuse,
+                             prefix_block=prefix_block)
         self.key = jax.random.PRNGKey(seed)
         self.cache = M.init_cache(cfg, batch_slots, max_len, dtype=dtype)
         # device-resident next positions (int32), parked at max_len-1 for
@@ -204,10 +298,23 @@ class ServingEngine:
         self._rid = 0
         self._slot_used = [False] * batch_slots
         self._prefilling: Dict[int, _PrefillJob] = {}
+        # cross-request KV prefix reuse: only the batched-prefill fast path
+        # can seed a slot (the legacy path rebuilds a batch-1 cache from
+        # scratch). The slot pool itself is always absolute-positioned in
+        # the serving regime (pos < max_len, so even windowed configs
+        # write line pos % M == pos), and window masking reads the same
+        # lines either way — content-identical caches keep bit-identity.
+        self.prefix_block = max(1, prefix_block)
+        self.prefix_reuse = bool(prefix_reuse and self.batched_prefill)
+        self._prefix = _PrefixIndex(self.prefix_block)
+        self._pending_copy: List[tuple] = []   # (dst_slot, src_slot, n)
+        self._pinned: set = set()              # copy sources awaiting launch
         self.stats = {"tokens_out": 0, "prefill_tokens": 0, "steps": 0,
                       "slot_reuses": 0, "peak_active": 0, "requests": 0,
                       "prefill_calls": 0, "prefill_batch_max": 0,
-                      "prefill_backend": None, "jit_retraces": 0}
+                      "prefill_backend": None, "jit_retraces": 0,
+                      "prefix_hits": 0, "prefill_tokens_saved": 0,
+                      "prefix_copies": 0}
 
     def _steps(self):
         """Resolve the jitted step pair against the CURRENT kernel-dispatch
@@ -227,6 +334,14 @@ class ServingEngine:
         decode_step, prefill_step = self._steps()
         self.stats["jit_retraces"] = (decode_step._cache_size()
                                       + prefill_step._cache_size())
+        # prefix-seed copy compiles tracked separately: _COPY_JITS is
+        # shared process-wide across (cfg, max_len) shapes, so folding it
+        # into jit_retraces would couple one engine's bound to every
+        # other engine's compile history. Its ladder is (g, width) —
+        # bounded exactly like prefill — and the no-new-compiles-on-rerun
+        # contract is pinned by the retrace regression test.
+        self.stats["prefix_seed_compiles"] = sum(
+            fn._cache_size() for fn in _COPY_JITS.values())
 
     def clone(self, *, seed: Optional[int] = None) -> "ServingEngine":
         """A fresh engine over the SAME config and params (no re-init)
@@ -237,7 +352,12 @@ class ServingEngine:
 
     # ---- public API ---------------------------------------------------
     def submit(self, prompt: "str | List[int]", *, max_new_tokens: int = 32,
-               temperature: float = 0.0) -> Request:
+               temperature: float = 0.0,
+               prefix_hint: Optional[List[int]] = None) -> Request:
+        # prefix_hint is a pool/scheduler affinity signal (see
+        # EnginePool.submit); a single engine matches against the actual
+        # prompt at admit time, so the hint is accepted and ignored here.
+        del prefix_hint
         if max_new_tokens >= self.max_len - 1:
             raise ValueError(
                 f"max_new_tokens={max_new_tokens} leaves no room for the "
@@ -312,6 +432,15 @@ class ServingEngine:
     def n_active(self) -> int:
         return sum(a is not None for a in self.active)
 
+    def prefix_match_len(self, ids) -> int:
+        """Longest block-aligned cached prefix (in tokens) this engine
+        could seed for ``ids`` right now — the pool's affinity signal.
+        Read-only: no pin, no eviction, no stats."""
+        if not self.prefix_reuse or not ids:
+            return 0
+        _, n = self._prefix.match(list(ids))
+        return n
+
     def cancel(self, req: Request) -> bool:
         """Withdraw a request: drop it from the admission queue, or free
         its KV slot (and any in-progress prefill) if already resident —
@@ -328,6 +457,13 @@ class ServingEngine:
             if r is req:
                 self.active[slot] = None
                 self._prefilling.pop(slot, None)
+                # drop any not-yet-launched prefix seed targeting this slot
+                # and recompute pins (a source stays pinned only while some
+                # other borrower still needs it)
+                if self._pending_copy:
+                    self._pending_copy = [c for c in self._pending_copy
+                                          if c[0] != slot]
+                    self._pinned = {src for _, src, _ in self._pending_copy}
                 req._engine = None
                 return True
         return False
@@ -335,7 +471,8 @@ class ServingEngine:
     # ---- engine internals ----------------------------------------------
     def _admit(self) -> None:
         for slot in range(self.slots):
-            if self.active[slot] is None and self.queue:
+            if (self.active[slot] is None and self.queue
+                    and slot not in self._pinned):
                 req = self.queue.pop(0)
                 self.active[slot] = req
                 # slot lease accounting: KV lines are a fixed pool; a
@@ -347,7 +484,24 @@ class ServingEngine:
                 self.stats["requests"] += 1
                 ids = req.prompt_ids[-(self.max_len - req.max_new_tokens - 1):]
                 if self.batched_prefill:
-                    self._prefilling[slot] = _PrefillJob(ids)
+                    job = _PrefillJob(ids)
+                    if self.prefix_reuse:
+                        # match BEFORE evicting this slot's own entry: if
+                        # the best source is the slot we just leased, its
+                        # prefix lines are already in place (in-place
+                        # reuse, no copy); otherwise pin the source so no
+                        # later lease overwrites it before the batched
+                        # seed copy launches.
+                        src, n = self._prefix.match(ids)
+                        if n > 0:
+                            job.off = n
+                            self.stats["prefix_hits"] += 1
+                            self.stats["prefill_tokens_saved"] += n
+                            if src != slot:
+                                self._pending_copy.append((slot, src, n))
+                                self._pinned.add(src)
+                        self._prefix.evict(slot)
+                    self._prefilling[slot] = job
                 else:
                     self._prefill_slot_legacy(slot, req, ids)
         self.stats["peak_active"] = max(self.stats["peak_active"],
@@ -365,6 +519,24 @@ class ServingEngine:
         ``serve_prefill_chunk`` call for the whole group. Host bookkeeping
         is deferred to ``_prefill_commit`` so a pool can overlap another
         replica's launch with this one's device compute."""
+        if self._pending_copy:
+            # seed newly leased slots from their matched sources in ONE
+            # batched copy, issued BEFORE this step's prefill writes: the
+            # copy reads the pre-step cache value (XLA data ordering), so
+            # even a source re-leased in the same admit pass is read
+            # intact. Pins release here — after this the borrowers own
+            # their lines and sources are free to be overwritten.
+            dst = np.asarray([c[0] for c in self._pending_copy], np.int32)
+            src = np.asarray([c[1] for c in self._pending_copy], np.int32)
+            ln = np.asarray([c[2] for c in self._pending_copy], np.int32)
+            width = self._bucket(int(ln.max()))
+            self.cache = _jit_copy(width)(
+                self.cache, jnp.asarray(src), jnp.asarray(dst),
+                jnp.asarray(ln))
+            self.stats["prefix_copies"] += len(self._pending_copy)
+            self._pending_copy.clear()
+            self._pinned.clear()
+            self._track_retraces()
         if not self._prefilling:
             return None
         jobs = sorted(self._prefilling.items())
@@ -411,6 +583,11 @@ class ServingEngine:
             if j.remaining == 0:
                 self.active[slot].output_ids.append(int(first_np[i]))
                 self._pos_np[slot] = len(j.ids)
+                if self.prefix_reuse:
+                    # the slot's prompt lines are now fully written (and
+                    # stable: decode only appends past them) — publish
+                    # them for later leases to borrow
+                    self._prefix.register(slot, j.ids)
                 del self._prefilling[slot]
 
     def _prefill_slot_legacy(self, slot: int, req: Request,
@@ -577,15 +754,40 @@ class JAXExecutor:
         implement, so there is no engine-vs-pool branching here."""
         return bool(self.engine.saturated())
 
+    # sibling subtasks of one query share this many leading characters of
+    # query context verbatim, so their prompts hash to the same KV prefix
+    # blocks (kept short: engine prompts are tail-truncated to the KV
+    # budget, and a truncated-away context can never be shared)
+    QUERY_CTX_CHARS = 40
+
+    # advertises the ``prefix_hint=`` submit kwarg to the fleet scheduler
+    # (analytic executors don't take it; the scheduler feature-detects)
+    accepts_prefix_hint = True
+
+    @classmethod
+    def query_context(cls, query) -> str:
+        """The verbatim prompt prefix every sibling subtask of ``query``
+        starts with — the DAG-level shared context."""
+        txt = getattr(query, "text", "") or ""
+        return (txt[:cls.QUERY_CTX_CHARS] + " >> ") if txt else ""
+
+    def shared_context(self, query) -> List[int]:
+        """Token ids of :meth:`query_context` — the prefix hint the fleet
+        scheduler pins on a dispatch and carries across retry, cloud→edge
+        spill, and degradation re-dispatch."""
+        return tok.encode(self.query_context(query))
+
     # ---- async surface (fleet pump loop) -------------------------------
-    def submit(self, query, node, dep_results) -> _Inflight:
+    def submit(self, query, node, dep_results, *,
+               prefix_hint: Optional[List[int]] = None) -> _Inflight:
         from repro.core.scheduler import _subtask_of
         st = _subtask_of(query, node)
-        prompt = node.desc + " || " + " ; ".join(
+        prompt = self.query_context(query) + node.desc + " || " + " ; ".join(
             dep_results[d].answer for d in node.deps if d in dep_results)
         n_bad = sum(1 for d in node.deps
                     if d in dep_results and not dep_results[d].correct)
-        req = self.engine.submit(prompt, max_new_tokens=min(st.tok_out, 48))
+        req = self.engine.submit(prompt, max_new_tokens=min(st.tok_out, 48),
+                                 prefix_hint=prefix_hint)
         return _Inflight(req, st.sid, self.cloud, st.difficulty, n_bad,
                          query, time.perf_counter())
 

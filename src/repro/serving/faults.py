@@ -216,9 +216,11 @@ class FaultyAsyncExecutor(FaultyExecutor):
         super().__init__(inner, injector, side)
         self._holds: Dict[int, List[Optional[float]]] = {}
 
-    def submit(self, query, node, dep_results):
+    def submit(self, query, node, dep_results, **kw):
+        # **kw passes scheduler extras (e.g. prefix_hint) through to the
+        # wrapped executor — chaos must not strip the KV affinity signal
         attempt = self._injector.on_submit(self._side, query.qid, node.sid)
-        h = self._inner.submit(query, node, dep_results)
+        h = self._inner.submit(query, node, dep_results, **kw)
         extra = self._injector.stall_for(self._side, query.qid, node.sid,
                                          attempt)
         if extra:

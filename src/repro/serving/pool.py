@@ -414,12 +414,22 @@ class EnginePool:
         another request (spill eligibility; see ``all_saturated``)."""
         return self.all_saturated
 
-    def submit(self, prompt, **kw) -> Request:
+    def submit(self, prompt, *, prefix_hint=None, **kw) -> Request:
         """Enqueue on the least-loaded surviving replica (healthy
         replicas beat suspect ones, warm replicas beat warming on equal
-        load; ties → lowest index). An elastic pool with nothing warm is
-        poked first — the first arrival after a gap starts a cold
-        replica warming and queues on it."""
+        load; then prefix affinity, then lowest index). An elastic pool
+        with nothing warm is poked first — the first arrival after a gap
+        starts a cold replica warming and queues on it.
+
+        Prefix affinity: each replica keeps its own prefix index (it
+        lives on the engine, so a dead replica's index dies with it and
+        failed-over requests simply re-match on the survivor). Among
+        equally loaded candidates the one holding the longest cached
+        prefix of ``prefix_hint`` (the scheduler's DAG hint) — or of the
+        prompt itself — wins, so co-scheduled siblings land where their
+        shared context is already hot. Affinity never outranks load:
+        reuse saves prefill, not decode, so piling onto a hot replica
+        would trade a prefill skip for whole decode steps."""
         alive = self._alive()
         if not alive:
             raise RuntimeError("EnginePool.submit: all replicas are dead")
@@ -432,9 +442,23 @@ class EnginePool:
             cands = cands or alive
         else:
             cands = alive
+        match = {j: 0 for j in cands}
+        if len(cands) > 1 and any(
+                getattr(self.engines[j], "prefix_reuse", False)
+                for j in cands):
+            ids = prefix_hint
+            if ids is None and isinstance(prompt, str):
+                from repro.data import tokenizer as tok
+                ids = tok.encode(prompt)
+            elif ids is None:
+                ids = list(prompt)
+            for j in cands:
+                fn = getattr(self.engines[j], "prefix_match_len", None)
+                match[j] = fn(ids) if fn is not None else 0
         i = min(cands, key=lambda j: (self.health[j] != "healthy",
                                       self.engines[j].load,
-                                      self.lifecycle[j] != "warm", j))
+                                      self.lifecycle[j] != "warm",
+                                      -match[j], j))
         self.pool_stats["submitted"][i] += 1
         return self.engines[i].submit(prompt, **kw)
 

@@ -27,10 +27,11 @@ Quickstart (analytic world-model executors)::
     report = rt.serve(gen_benchmark("gpqa", 32))
     print(report.qps, report.p50_latency, report.p99_latency)
 
-All runtime knobs live on the frozen :class:`ServingConfig`; the old
-flat ``ServingRuntime(..., max_inflight=8, pump=True, ...)`` kwargs are
-still accepted for one release through a deprecation shim that maps
-them into a config and warns. One dispatcher runs every mode::
+All runtime knobs live on the frozen :class:`ServingConfig`; the PR 8
+flat-kwargs deprecation shim is gone (its one-release window is up), so
+``ServingRuntime(edge, cloud, policy, planner=, config=)`` is the whole
+constructor surface and anything else raises ``TypeError``. One
+dispatcher runs every mode::
 
     rt.serve(queries)                          # closed loop (fleet)
     rt.serve(queries, mode="sequential")       # one-at-a-time baseline
@@ -79,7 +80,6 @@ from __future__ import annotations
 
 import math
 import time
-import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
@@ -130,12 +130,6 @@ class ServingConfig:
     retry: Optional[RetryPolicy] = None
     faults: object = None
     stall_grace: float = 5.0
-
-
-# legacy flat-kwarg surface, accepted for one release via the shim below
-_LEGACY_KEYS = ("max_inflight", "global_k_max", "global_l_max",
-                "spill_to_edge", "pump", "replicas", "retry", "faults",
-                "stall_grace")
 
 
 @dataclass
@@ -239,22 +233,10 @@ class ServingRuntime:
 
     def __init__(self, edge: Executor, cloud: Executor,
                  policy: RoutingPolicy, *, planner=None,
-                 config: Optional[ServingConfig] = None, **legacy):
-        bad = set(legacy) - set(_LEGACY_KEYS)
-        if bad:
-            raise TypeError(f"ServingRuntime got unexpected keyword "
-                            f"argument(s): {sorted(bad)}")
-        if legacy:
-            if config is not None:
-                raise TypeError(
-                    "pass either config=ServingConfig(...) or the legacy "
-                    "flat kwargs, not both")
-            warnings.warn(
-                "ServingRuntime flat kwargs "
-                f"({', '.join(sorted(legacy))}) are deprecated; pass "
-                "config=ServingConfig(...) instead",
-                DeprecationWarning, stacklevel=2)
-            config = ServingConfig(**legacy)
+                 config: Optional[ServingConfig] = None):
+        # the PR 8 flat-kwargs deprecation shim served its one-release
+        # window and is gone: every runtime knob lives on ServingConfig,
+        # and an unknown kwarg is a plain TypeError from Python itself
         cfg = config if config is not None else ServingConfig()
         self.config = cfg
         self.edge = edge
@@ -359,9 +341,15 @@ class ServingRuntime:
                            price_out=cloud.price_out)
 
     def _pool_occupancy(self, stats: Dict) -> Dict:
-        """Attach per-replica slot-lease stats for engine-backed pools."""
+        """Attach per-replica slot-lease stats for engine-backed pools,
+        plus KV prefix-reuse counters for any engine-backed side."""
         for name, ex in (("edge", self.edge), ("cloud", self.cloud)):
             eng = getattr(ex, "engine", None)
+            est = getattr(eng, "stats", None)
+            if est is not None and "prefix_hits" in est:
+                stats[f"{name}_prefix_hits"] = est["prefix_hits"]
+                stats[f"{name}_prefill_tokens_saved"] = \
+                    est["prefill_tokens_saved"]
             occ = getattr(eng, "occupancy", None)
             if occ is None:
                 continue

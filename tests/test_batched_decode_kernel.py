@@ -190,18 +190,31 @@ def test_engine_retraces_bounded_across_varied_length_fleet(model_zoo):
     cfg, params = model_zoo("qwen2-1.5b")
 
     def fleet(lengths, seed):
+        # measure the DELTA this fleet adds to the lru-SHARED step cache:
+        # other tests' engines share the (cfg, max_len, backend) key, so
+        # the absolute count depends on test ordering, but what one fleet
+        # mix ADDS is ladder-bounded regardless
         eng = ServingEngine(cfg, params, batch_slots=3, max_len=96,
                             prefill_chunk=8, seed=seed)
+        eng._track_retraces()
+        base = eng.stats["jit_retraces"]
+        cbase = eng.stats["prefix_seed_compiles"]
         reqs = [eng.submit("word " * n, max_new_tokens=3) for n in lengths]
         eng.run_until_done()
         assert all(r.done for r in reqs)
-        return eng.stats["jit_retraces"]
+        return (eng.stats["jit_retraces"] - base,
+                eng.stats["prefix_seed_compiles"] - cbase)
 
     # ladder for this shape: g in {1,2,3}; width == 8 (chunk bucket);
     # kv_width in {8, 16, 32, 64, 96}; decode is one shape
     bound = 3 * 5 + 1
     lengths = [1, 3, 5, 9, 14, 22, 30, 38]
-    n1 = fleet(lengths, seed=0)
-    assert 0 < n1 <= bound, n1
-    n2 = fleet(lengths, seed=1)
-    assert n2 == n1, (n1, n2)
+    n1, c1 = fleet(lengths, seed=0)
+    assert n1 <= bound, n1
+    # rerunning the SAME length mix on a fresh engine adds ZERO compiles
+    # (the lru-shared step pair is the whole point); the "word "*n fleet
+    # shares prefixes, so the prefix-seed copy ladder obeys the same
+    # contract
+    n2, c2 = fleet(lengths, seed=1)
+    assert n2 == 0, (n1, n2)
+    assert c2 == 0, (c1, c2)

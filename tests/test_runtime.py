@@ -350,50 +350,20 @@ def test_kv_slots_reused_across_queries(model_zoo):
             assert eng.stats["slot_reuses"] >= eng.stats["requests"] - eng.slots
 
 
-# ---- ServingConfig surface + deprecation shim --------------------------
+# ---- ServingConfig surface ---------------------------------------------
 
-def test_serving_config_shim_maps_legacy_kwargs():
-    """The pre-redesign flat kwargs still work for one release: they warn
-    and land on the same frozen ServingConfig the config= path builds."""
-    from repro.serving.runtime import ServingConfig, ServingRuntime
-    pipe = Pipeline()
-    with pytest.warns(DeprecationWarning, match="ServingConfig"):
-        rt = ServingRuntime(pipe.edge, pipe.cloud, StaticPolicy(0),
-                            planner=pipe.planner, max_inflight=3,
-                            global_k_max=0.5, spill_to_edge=True)
-    assert rt.config == ServingConfig(max_inflight=3, global_k_max=0.5,
-                                      spill_to_edge=True)
-    assert rt.max_inflight == 3 and rt.spill_to_edge is True
-
-
-def test_serving_config_rejects_unknown_and_mixed_kwargs():
-    from repro.serving.runtime import ServingConfig, ServingRuntime
+def test_serving_runtime_rejects_flat_kwargs():
+    """The PR 8 deprecation shim is gone: the constructor surface is
+    exactly (edge, cloud, policy, *, planner=, config=) and any other
+    kwarg — including the formerly shimmed flat knobs — is a TypeError."""
+    from repro.serving.runtime import ServingRuntime
     pipe = Pipeline()
     with pytest.raises(TypeError, match="unexpected keyword"):
         ServingRuntime(pipe.edge, pipe.cloud, StaticPolicy(0),
                        planner=pipe.planner, bogus_knob=1)
-    with pytest.raises(TypeError, match="config="):
+    with pytest.raises(TypeError, match="unexpected keyword"):
         ServingRuntime(pipe.edge, pipe.cloud, StaticPolicy(0),
-                       planner=pipe.planner, config=ServingConfig(),
-                       max_inflight=3)
-
-
-def test_shim_serves_identically_to_config_path():
-    """A shimmed runtime and a config= runtime produce the same report
-    for the same closed-loop batch (the shim only relocates knobs)."""
-    from repro.serving.runtime import ServingConfig, ServingRuntime
-    pipe = Pipeline()
-    qs = gen_benchmark("gpqa", 6)
-    rt_c = ServingRuntime(pipe.edge, pipe.cloud, StaticPolicy(1),
-                          planner=pipe.planner,
-                          config=ServingConfig(max_inflight=4))
-    with pytest.warns(DeprecationWarning):
-        rt_l = ServingRuntime(pipe.edge, pipe.cloud, StaticPolicy(1),
-                              planner=pipe.planner, max_inflight=4)
-    a, b = rt_c.serve(qs), rt_l.serve(qs)
-    assert a.makespan == b.makespan
-    for ra, rb in zip(a.results, b.results):
-        _assert_same_result(ra, rb)
+                       planner=pipe.planner, max_inflight=3)
 
 
 def test_serve_dispatcher_validation():
