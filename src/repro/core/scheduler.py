@@ -677,6 +677,7 @@ class FleetScheduler:
         self.makespan = st.clock
         return self._collect_results()
 
+    # reprolint: hot
     def _run_pumped(self) -> List[QueryResult]:
         """Real-time driver for async executors: dispatch = ``submit`` into
         the executor's engine; a pump loop then steps every engine while

@@ -50,6 +50,9 @@ NEG_INF = -1e30
 _SUBLANE = 8   # pad the folded [KV, grp, hd] q tile up to 8 sublane rows
 
 
+# Ref order contract (checked statically by reprolint pallas-contract):
+# 1 scalar-prefetch ref (kv_len), then in_specs, out, scratch — the
+# signature arity must match the PrefetchScalarGridSpec below.
 def _batched_decode_kernel(kv_len_ref, q_ref, k_ref, v_ref, o_ref,
                            m_scr, l_scr, acc_scr, *, scale: float,
                            window: Optional[int], bk: int, gp: int):

@@ -24,6 +24,8 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.dispatch import tpu_compiler_params
 
 
+# Ref order contract (checked statically by reprolint pallas-contract):
+# no scalar prefetch — 4 in_specs, 1 out, 1 VMEM scratch, in order.
 def _gla_kernel(q_ref, k_ref, v_ref, la_ref, o_ref, s_scr, *, chunk: int):
     ci = pl.program_id(2)
 

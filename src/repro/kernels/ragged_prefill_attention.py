@@ -76,6 +76,11 @@ from repro.kernels.dispatch import tpu_compiler_params
 NEG_INF = -1e30
 
 
+# Ref order contract (checked statically by reprolint pallas-contract):
+# 2 scalar-prefetch refs (pos0, take), then in_specs, out, scratch —
+# the signature arity must match the PrefetchScalarGridSpec below, and
+# every BlockSpec index map stays pure arithmetic over
+# (grid indices..., prefetch refs...).
 def _ragged_prefill_kernel(pos0_ref, take_ref, q_ref, k_ref, v_ref, o_ref,
                            m_scr, l_scr, acc_scr, *, scale: float,
                            window: Optional[int], bq: int, bk: int,

@@ -121,6 +121,20 @@ runs are bit-identical to the pre-fault-tolerance stack (chaos suite:
 ``tests/test_faults.py``). ``serving.faults`` provides the seeded
 ``FaultPlan``/``FaultInjector`` chaos harness that exercises all of the
 above reproducibly (``launch/serve.py --faults``).
+
+Thread-ownership annotations
+----------------------------
+The "replica state strictly thread-private, results joined in replica
+order" contract behind all of the above is *declared in code* and
+checked statically by the gating ``reprolint`` CI job:
+``ServingEngine`` and ``EnginePool`` carry ``_THREAD_OWNERSHIP`` /
+``_WORKER_METHODS`` / ``_CONCURRENT_METHODS`` class attributes mapping
+each attribute to its ownership domain (``replica-private``,
+``join-only``, ``shared-lock:<lockattr>``), and module-level shared
+state (e.g. the ``_COPY_JITS`` compile cache) declares its lock via
+``_MODULE_OWNERSHIP``.  New engine/pool state MUST be added to those
+maps; see ``tools/reprolint/README.md`` for the domain semantics and
+the thread-ownership rule catalog entry.
 """
 from typing import List, Protocol, runtime_checkable
 

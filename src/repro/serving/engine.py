@@ -59,6 +59,7 @@ cloud→edge spill only fires when every replica is really full.
 from __future__ import annotations
 
 import functools
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, TYPE_CHECKING
@@ -206,20 +207,27 @@ class _PrefixIndex:
 # Jitted cross-slot prefix-copy steps, one per static gather width (the
 # same power-of-two bucket ladder as chunk widths). Module-level so pool
 # replicas and fleet reruns share compiles; _track_retraces folds their
-# signature counts into stats["jit_retraces"].
+# signature counts into stats["jit_retraces"]. Pool replicas pump on
+# ThreadPoolExecutor workers, so the dict is mutated concurrently with
+# another replica's _track_retraces iteration — all access goes through
+# _COPY_LOCK (declared below, enforced by reprolint's thread-ownership
+# rule).
 _COPY_JITS: Dict[int, object] = {}
+_COPY_LOCK = threading.Lock()
+_MODULE_OWNERSHIP = {"_COPY_JITS": "shared-lock:_COPY_LOCK"}
 
 
 def _jit_copy(width: int):
-    fn = _COPY_JITS.get(width)
-    if fn is None:
-        def copy_fn(cache, src_idx, dst_idx, length):
-            k, v = KV.copy_prefix(cache["k"], cache["v"], src_idx, dst_idx,
-                                  length, width)
-            return dict(cache, k=k, v=v)
-        fn = jax.jit(copy_fn, donate_argnums=(0,))
-        _COPY_JITS[width] = fn
-    return fn
+    with _COPY_LOCK:
+        fn = _COPY_JITS.get(width)
+        if fn is None:
+            def copy_fn(cache, src_idx, dst_idx, length):
+                k, v = KV.copy_prefix(cache["k"], cache["v"], src_idx,
+                                      dst_idx, length, width)
+                return dict(cache, k=k, v=v)
+            fn = jax.jit(copy_fn, donate_argnums=(0,))
+            _COPY_JITS[width] = fn
+        return fn
 
 
 @functools.lru_cache(maxsize=64)
@@ -262,6 +270,31 @@ def _jit_steps(cfg: ModelConfig, max_len: int, use_pallas: bool = False):
 
 class ServingEngine:
     """Slot-based continuous batching engine for one model."""
+
+    # Concurrency contract, enforced statically by reprolint's
+    # thread-ownership rule (tools/reprolint/README.md): when this
+    # engine is an EnginePool replica, step()/pump() run on a
+    # ThreadPoolExecutor worker, so everything the step path touches is
+    # replica-private — owned by that worker while a pool pump is in
+    # flight, and never reachable through another object reference from
+    # code running concurrently with workers.
+    _THREAD_OWNERSHIP = {
+        "cache": "replica-private",
+        "pos": "replica-private",
+        "_pos_np": "replica-private",
+        "key": "replica-private",
+        "active": "replica-private",
+        "queue": "replica-private",
+        "_prefilling": "replica-private",
+        "_pending_copy": "replica-private",
+        "_pinned": "replica-private",
+        "_prefix": "replica-private",
+        "_slot_used": "replica-private",
+        "stats": "replica-private",
+    }
+    # worker-thread entry points; reprolint closes the set over self.x()
+    # calls, so every helper the step path reaches is checked too
+    _WORKER_METHODS = ("step", "pump")
 
     def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
                  max_len: int = 512, dtype=jnp.float32, seed: int = 0,
@@ -339,9 +372,13 @@ class ServingEngine:
         # into jit_retraces would couple one engine's bound to every
         # other engine's compile history. Its ladder is (g, width) —
         # bounded exactly like prefill — and the no-new-compiles-on-rerun
-        # contract is pinned by the retrace regression test.
+        # contract is pinned by the retrace regression test. Snapshot the
+        # shared dict under its lock: another pool replica's worker may
+        # be inserting a new width mid-iteration.
+        with _COPY_LOCK:
+            fns = list(_COPY_JITS.values())
         self.stats["prefix_seed_compiles"] = sum(
-            fn._cache_size() for fn in _COPY_JITS.values())
+            fn._cache_size() for fn in fns)
 
     def clone(self, *, seed: Optional[int] = None) -> "ServingEngine":
         """A fresh engine over the SAME config and params (no re-init)
@@ -386,6 +423,7 @@ class ServingEngine:
         """Requests holding or waiting on a slot (active + queued)."""
         return self.n_active + len(self.queue)
 
+    # reprolint: hot
     def pump(self) -> bool:
         """Advance one step if there is work. Returns progress (the same
         surface ``EnginePool.pump`` exposes for a whole replica set)."""
@@ -514,6 +552,7 @@ class ServingEngine:
             b *= 2
         return min(b, self.max_len)
 
+    # reprolint: hot
     def _prefill_launch(self) -> Optional[_PrefillPass]:
         """Launch one chunk for every prefilling slot — a single padded
         ``serve_prefill_chunk`` call for the whole group. Host bookkeeping
@@ -532,7 +571,7 @@ class ServingEngine:
             width = self._bucket(int(ln.max()))
             self.cache = _jit_copy(width)(
                 self.cache, jnp.asarray(src), jnp.asarray(dst),
-                jnp.asarray(ln))
+                jnp.asarray(ln))  # donate+rebind: reprolint-clean idiom
             self.stats["prefix_copies"] += len(self._pending_copy)
             self._pending_copy.clear()
             self._pinned.clear()
@@ -565,7 +604,10 @@ class ServingEngine:
         _, prefill_step = self._steps()
         first, self.pos, self.cache, self.key = prefill_step(
             self.params, jnp.asarray(tokens), jnp.asarray(slot_idx),
-            jnp.asarray(pos0), jnp.asarray(np.asarray(take, np.int32)),
+            jnp.asarray(pos0),
+            # host->device upload of a Python list, not a device sync
+            # reprolint: disable=host-sync-in-hot-path -- take is a host list; np.asarray builds the upload buffer
+            jnp.asarray(np.asarray(take, np.int32)),
             self.pos, self.cache, self.key, jnp.asarray(temps), kv_width)
         self.stats["prefill_calls"] += 1
         self.stats["prefill_batch_max"] = max(
@@ -573,9 +615,11 @@ class ServingEngine:
         self._track_retraces()
         return _PrefillPass(jobs, take, first)
 
+    # reprolint: hot
     def _prefill_commit(self, p: _PrefillPass) -> None:
         """Sync the launched prefill chunk and advance the per-slot jobs
         (first sampled token, slot positions, finished-job retirement)."""
+        # reprolint: disable=host-sync-in-hot-path -- the ONE host transfer per prefill pass (sampled first tokens)
         first_np = np.asarray(p.first)
         for i, (slot, j) in enumerate(p.jobs):
             j.off += p.take[i]
@@ -627,15 +671,19 @@ class ServingEngine:
         self.stats["prefill_tokens"] += len(ids)
         req.output_ids.append(self._sample_host(logits[0, -1], req))
 
+    # reprolint: hot
     def _sample_host(self, logits, req: Request) -> int:
         """Host-side sampling (legacy prefill path only)."""
+        # reprolint: disable=host-sync-in-hot-path -- legacy batch-1 path samples on host by design (reference behavior)
         logits = np.asarray(logits, np.float32)
         if req.temperature <= 0:
             return int(np.argmax(logits))
         self.key, k = jax.random.split(self.key)
+        # reprolint: disable=host-sync-in-hot-path -- legacy path: one sampled id comes back to host here
         return int(jax.random.categorical(
             k, jnp.asarray(logits) / req.temperature))
 
+    # reprolint: hot
     def _decode_launch(self) -> Optional[_DecodePass]:
         """Launch one decode token for every live (fully prefilled) slot;
         host bookkeeping is deferred to ``_decode_commit``."""
@@ -657,9 +705,11 @@ class ServingEngine:
         self._track_retraces()
         return _DecodePass(live_slots, nxt)
 
+    # reprolint: hot
     def _decode_commit(self, d: _DecodePass) -> List[Request]:
         """Sync the launched decode step and retire finished requests."""
-        nxt_np = np.asarray(d.nxt)      # the ONE host transfer per step
+        # reprolint: disable=host-sync-in-hot-path -- the ONE host transfer per decode step (sampled ids)
+        nxt_np = np.asarray(d.nxt)
         finished: List[Request] = []
         for i in d.live_slots:
             req = self.active[i]
@@ -676,6 +726,7 @@ class ServingEngine:
         self.stats["steps"] += 1
         return finished
 
+    # reprolint: hot
     def step(self) -> List[Request]:
         """One engine iteration: admit waiting requests, advance every
         prefilling slot by one chunk, then decode one token for all live
@@ -791,6 +842,7 @@ class JAXExecutor:
         return _Inflight(req, st.sid, self.cloud, st.difficulty, n_bad,
                          query, time.perf_counter())
 
+    # reprolint: hot
     def pump(self) -> bool:
         """Advance the engine (or every loaded pool replica) one step if
         it has work. Returns progress."""
@@ -807,6 +859,7 @@ class JAXExecutor:
         budget model stays honest under faults."""
         return len(h.req.output_ids) * self.price_out if self.cloud else 0.0
 
+    # reprolint: hot
     def poll(self, h: _Inflight):
         """Collect a finished future; None while still decoding."""
         if not h.req.done:

@@ -254,6 +254,30 @@ class Autoscaler:
 class EnginePool:
     """R serving-engine replicas behind one engine-shaped surface."""
 
+    # Concurrency contract, enforced statically by reprolint's
+    # thread-ownership rule (tools/reprolint/README.md). During a
+    # threaded step() pass, each replica's worker owns that replica's
+    # state (ServingEngine declares it replica-private); everything
+    # pool-level below is join-only — read or mutated only by the
+    # coordinator thread, with mutations happening at/after the
+    # f.result() join barrier. The pool itself runs no worker-thread
+    # methods (workers execute ServingEngine.step), and step() is the
+    # one method during which workers are live (_CONCURRENT_METHODS is
+    # deliberately not closed over callees: _kill_replica /
+    # _update_health / _hedge_from run after the join barrier).
+    _THREAD_OWNERSHIP = {
+        "engines": "join-only",
+        "health": "join-only",
+        "lifecycle": "join-only",
+        "pool_stats": "join-only",
+        "autoscaler": "join-only",
+        "_tp": "join-only",
+        "_last_progress": "join-only",
+        "_stalled_passes": "join-only",
+    }
+    _WORKER_METHODS = ()
+    _CONCURRENT_METHODS = ("step",)
+
     def __init__(self, engines: Sequence[ServingEngine], *,
                  threads: bool = True, failover: bool = True,
                  suspect_after: Optional[int] = None,
@@ -462,6 +486,7 @@ class EnginePool:
         self.pool_stats["submitted"][i] += 1
         return self.engines[i].submit(prompt, **kw)
 
+    # reprolint: hot
     def step(self) -> List[Request]:
         """One pool pass: step every surviving replica with pending work
         (see the module docstring for the threaded vs
@@ -642,6 +667,7 @@ class EnginePool:
                 return e.cancel(req)
         return False
 
+    # reprolint: hot
     def pump(self) -> bool:
         """Advance every replica with pending work one step, in one
         pass. Returns whether anything progressed. Elastic pools tick

@@ -342,7 +342,12 @@ class ServingRuntime:
 
     def _pool_occupancy(self, stats: Dict) -> Dict:
         """Attach per-replica slot-lease stats for engine-backed pools,
-        plus KV prefix-reuse counters for any engine-backed side."""
+        plus KV prefix-reuse counters for any engine-backed side.
+
+        Runs after the fleet loop returns, so no pool worker is live:
+        reading engine ``stats`` (replica-private under the
+        thread-ownership contract — see ``serving/__init__`` and
+        tools/reprolint/README.md) is safe here without any barrier."""
         for name, ex in (("edge", self.edge), ("cloud", self.cloud)):
             eng = getattr(ex, "engine", None)
             est = getattr(eng, "stats", None)

@@ -1,0 +1,21 @@
+"""reprolint — repo-native static analysis for the serving stack.
+
+Five AST-level checkers turn the codebase's concurrency and JAX
+contracts into gating CI (see README.md for the rule catalog):
+
+* ``donation-discipline`` — use-after-donate at jit call sites
+* ``thread-ownership``    — declared ownership domains for pool state
+* ``retrace-hazard``      — per-call jit construction, unstable keys
+* ``host-sync-in-hot-path`` — device syncs in decode/pump loops
+* ``pallas-contract``     — pallas_call arity / index-map purity /
+  dispatch layering
+
+Pure stdlib (``ast`` + ``tokenize``); no JAX import, no device.
+Run with ``PYTHONPATH=tools python -m reprolint [paths] [--json]``.
+"""
+from .core import Finding, Module, RunResult, analyze_source, run
+from .rules import ALL_RULES, RULE_NAMES
+
+__version__ = "0.1.0"
+__all__ = ["ALL_RULES", "Finding", "Module", "RULE_NAMES", "RunResult",
+           "analyze_source", "run"]

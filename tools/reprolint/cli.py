@@ -1,0 +1,90 @@
+"""Command-line entry point: ``python -m reprolint [paths] [--json]``.
+
+Exit status is 0 when no error-severity findings remain after
+suppression and baseline filtering, 1 otherwise.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List, Optional, Sequence
+
+from .core import run
+from .rules import ALL_RULES
+
+DEFAULT_PATHS = ("src", "tests", "benchmarks")
+DEFAULT_BASELINE = Path(__file__).resolve().parent / "baseline.json"
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="reprolint",
+        description="repo-native static analysis: JAX donation "
+                    "discipline, thread ownership, retrace hazards, "
+                    "host syncs in hot paths, Pallas kernel contracts")
+    p.add_argument("paths", nargs="*", default=list(DEFAULT_PATHS),
+                   help="files or directories to analyze "
+                        f"(default: {' '.join(DEFAULT_PATHS)})")
+    p.add_argument("--json", action="store_true", dest="as_json",
+                   help="emit findings as a JSON object on stdout")
+    p.add_argument("--baseline", type=Path, default=DEFAULT_BASELINE,
+                   help="JSON baseline of accepted findings "
+                        "(default: the package's baseline.json; "
+                        "ships empty)")
+    p.add_argument("--no-baseline", action="store_true",
+                   help="ignore the baseline file entirely")
+    p.add_argument("--summary", action="store_true",
+                   help="append a markdown per-rule count table "
+                        "(for CI job summaries)")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print the rule catalog and exit")
+    return p
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    if args.list_rules:
+        for rule in ALL_RULES:
+            print(f"{rule.name}: {rule.description}")
+        return 0
+
+    baseline = None if args.no_baseline else args.baseline
+    result = run(args.paths, ALL_RULES, baseline=baseline)
+
+    if args.as_json:
+        print(json.dumps({
+            "files": result.n_files,
+            "baseline_hits": result.baseline_hits,
+            "counts": result.counts,
+            "findings": [f.to_json() for f in result.findings],
+        }, indent=2))
+    else:
+        for f in result.findings:
+            print(f.render())
+        if result.findings:
+            print(f"reprolint: {len(result.findings)} finding(s) in "
+                  f"{result.n_files} file(s)")
+        else:
+            print(f"reprolint: clean ({result.n_files} files, "
+                  f"{len(ALL_RULES)} rules)")
+        if result.baseline_hits:
+            print(f"reprolint: {result.baseline_hits} baselined "
+                  "finding(s) suppressed")
+
+    if args.summary:
+        lines: List[str] = ["", "| rule | findings |", "| --- | --- |"]
+        counts = result.counts
+        for rule in ALL_RULES:
+            lines.append(f"| {rule.name} | {counts.get(rule.name, 0)} |")
+        for extra in sorted(set(counts) - {r.name for r in ALL_RULES}):
+            lines.append(f"| {extra} | {counts[extra]} |")
+        lines.append(f"| **files scanned** | {result.n_files} |")
+        print("\n".join(lines))
+
+    return 0 if result.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,374 @@
+"""Framework core for reprolint: file walking, directive parsing, the
+``Finding`` model, suppression/baseline semantics and the two-phase
+rule runner.
+
+Directives
+----------
+Two comment directives are recognised, either trailing on a line or on
+a comment-only line immediately above the line they govern:
+
+``# reprolint: disable=<rule>[,<rule>...] -- <justification>``
+    Suppress the named rule(s) on the governed line.  The justification
+    is **mandatory**: a disable directive without ``-- <reason>`` (or
+    naming an unknown rule) is itself reported as a ``reprolint-directive``
+    error, and the suppression does not take effect.
+
+``# reprolint: hot``
+    Mark the governed ``def`` as a hot path (decode/pump loop).  The
+    ``host-sync-in-hot-path`` and ``retrace-hazard`` rules only inspect
+    hot functions; nested ``def``s inherit hotness from their enclosing
+    function.
+
+Run model
+---------
+Rules are objects with a ``name``, a ``collect(module, ctx)`` phase
+(run over every module first, so rules may build cross-module context)
+and a ``check(module, ctx)`` phase returning ``Finding``s.  Suppression
+and baseline filtering happen in the runner, not in the rules.
+"""
+from __future__ import annotations
+
+import ast
+import io
+import json
+import re
+import tokenize
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+SEVERITIES = ("error", "warning")
+
+_DIRECTIVE_RE = re.compile(r"#\s*reprolint:\s*(?P<body>.*\S)?\s*$")
+_DISABLE_RE = re.compile(
+    r"disable\s*=\s*(?P<rules>[A-Za-z0-9_\-,\s]+?)"
+    r"(?:\s+--\s*(?P<reason>.*\S))?$")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One diagnostic: ``rule`` that fired, ``path``/``line`` location,
+    ``severity`` ("error" | "warning") and a human message."""
+
+    rule: str
+    path: str
+    line: int
+    severity: str
+    message: str
+
+    def key(self) -> Tuple[str, str, str]:
+        """Baseline fingerprint: line numbers drift, so the baseline
+        matches on (rule, path, message) only."""
+        return (self.rule, self.path, self.message)
+
+    def to_json(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "severity": self.severity, "message": self.message}
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}: [{self.severity}] "
+                f"{self.rule}: {self.message}")
+
+
+@dataclass
+class Suppression:
+    line: int                # line the directive governs
+    rules: Tuple[str, ...]
+    reason: str
+    directive_line: int
+    used: bool = False
+
+
+class Module:
+    """One parsed source file plus its reprolint directives."""
+
+    def __init__(self, path: str, source: str,
+                 known_rules: Sequence[str] = ()):
+        self.path = path
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree: Optional[ast.AST] = None
+        self.parse_error: Optional[Finding] = None
+        self.suppressions: Dict[int, List[Suppression]] = {}
+        self.hot_lines: Set[int] = set()
+        self.directive_findings: List[Finding] = []
+        try:
+            self.tree = ast.parse(source, filename=path)
+        except SyntaxError as exc:
+            self.parse_error = Finding(
+                "reprolint-parse", path, exc.lineno or 1, "error",
+                f"could not parse file: {exc.msg}")
+        self._scan_directives(tuple(known_rules))
+        self._hot_functions: Optional[Set[ast.AST]] = None
+
+    # -- directive scanning -------------------------------------------
+
+    def _scan_directives(self, known_rules: Tuple[str, ...]) -> None:
+        try:
+            tokens = list(tokenize.generate_tokens(
+                io.StringIO(self.source).readline))
+        except (tokenize.TokenError, IndentationError, SyntaxError):
+            return
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = _DIRECTIVE_RE.search(tok.string)
+            if m is None:
+                continue
+            lineno, col = tok.start
+            # comment-only line => directive governs the next line
+            prefix = self.lines[lineno - 1][:col] if lineno <= len(
+                self.lines) else ""
+            own_line = prefix.strip() == ""
+            governed = lineno + 1 if own_line else lineno
+            body = (m.group("body") or "").strip()
+            if body == "hot":
+                self.hot_lines.add(governed)
+                continue
+            dm = _DISABLE_RE.match(body)
+            if dm is None:
+                self.directive_findings.append(Finding(
+                    "reprolint-directive", self.path, lineno, "error",
+                    f"unrecognised reprolint directive: {body!r} "
+                    "(expected 'disable=<rule>[,...] -- <reason>' "
+                    "or 'hot')"))
+                continue
+            rules = tuple(r.strip() for r in dm.group("rules").split(",")
+                          if r.strip())
+            reason = (dm.group("reason") or "").strip()
+            if not reason:
+                self.directive_findings.append(Finding(
+                    "reprolint-directive", self.path, lineno, "error",
+                    "suppression requires a justification: "
+                    "'# reprolint: disable=<rule> -- <why this is safe>'"))
+                continue
+            unknown = [r for r in rules
+                       if known_rules and r not in known_rules]
+            if unknown:
+                self.directive_findings.append(Finding(
+                    "reprolint-directive", self.path, lineno, "error",
+                    f"unknown rule(s) in disable directive: "
+                    f"{', '.join(unknown)}"))
+                continue
+            self.suppressions.setdefault(governed, []).append(
+                Suppression(governed, rules, reason, lineno))
+
+    # -- hot-path marking ---------------------------------------------
+
+    def is_hot(self, func: ast.AST) -> bool:
+        """True if ``func`` (a FunctionDef/AsyncFunctionDef) carries a
+        ``# reprolint: hot`` marker, or is nested inside one that does.
+        The marker may sit on the ``def`` line, on the line governing it
+        (comment line above), or above the first decorator."""
+        return func in self._hot_function_set()
+
+    def _hot_function_set(self) -> Set[ast.AST]:
+        if self._hot_functions is not None:
+            return self._hot_functions
+        hot: Set[ast.AST] = set()
+        if self.tree is not None:
+            self._collect_hot(self.tree, False, hot)
+        self._hot_functions = hot
+        return hot
+
+    def _directly_hot(self, node: ast.AST) -> bool:
+        candidates = {node.lineno}
+        if getattr(node, "decorator_list", None):
+            candidates.add(node.decorator_list[0].lineno)
+        return bool(candidates & self.hot_lines)
+
+    def _collect_hot(self, node: ast.AST, inherited: bool,
+                     out: Set[ast.AST]) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                hot = inherited or self._directly_hot(child)
+                if hot:
+                    out.add(child)
+                self._collect_hot(child, hot, out)
+            else:
+                self._collect_hot(child, inherited, out)
+
+    # -- suppression lookup -------------------------------------------
+
+    def suppressed(self, finding: Finding) -> bool:
+        for sup in self.suppressions.get(finding.line, ()):
+            if finding.rule in sup.rules:
+                sup.used = True
+                return True
+        return False
+
+
+class RunContext:
+    """Cross-module scratch space shared between collect and check
+    phases.  Rules namespace their state by attribute."""
+
+    def __init__(self) -> None:
+        self.modules: Dict[str, Module] = {}
+        # rule-owned registries (see rules/*.py)
+        self.ownership_replica_private: Dict[str, str] = {}
+
+
+@dataclass
+class RunResult:
+    findings: List[Finding]
+    baseline_hits: int
+    n_files: int
+
+    @property
+    def counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for f in self.findings:
+            out[f.rule] = out.get(f.rule, 0) + 1
+        return out
+
+    @property
+    def ok(self) -> bool:
+        return not any(f.severity == "error" for f in self.findings)
+
+
+def iter_python_files(paths: Iterable[str]) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            out.extend(sorted(path.rglob("*.py")))
+        elif path.suffix == ".py":
+            out.append(path)
+    # dedupe, preserve order
+    seen: Set[Path] = set()
+    uniq = []
+    for p in out:
+        if p not in seen:
+            seen.add(p)
+            uniq.append(p)
+    return uniq
+
+
+def load_baseline(path: Optional[Path]) -> Set[Tuple[str, str, str]]:
+    """Baseline file: JSON list of ``{"rule", "path", "message"}``
+    fingerprints accepted as pre-existing debt.  Ships empty."""
+    if path is None or not path.exists():
+        return set()
+    data = json.loads(path.read_text())
+    return {(d["rule"], d["path"], d["message"]) for d in data}
+
+
+def run(paths: Sequence[str], rules: Sequence[object],
+        baseline: Optional[Path] = None,
+        sources: Optional[Dict[str, str]] = None) -> RunResult:
+    """Analyze ``paths`` (dirs or .py files) under ``rules``.
+
+    ``sources`` maps path -> source text for in-memory analysis (tests);
+    when given, ``paths`` entries are looked up there instead of disk.
+    """
+    known = [r.name for r in rules]
+    ctx = RunContext()
+    modules: List[Module] = []
+    if sources is not None:
+        for p in paths:
+            mod = Module(p, sources[p], known)
+            modules.append(mod)
+            ctx.modules[p] = mod
+    else:
+        for fp in iter_python_files(paths):
+            try:
+                text = fp.read_text(encoding="utf-8")
+            except (OSError, UnicodeDecodeError):
+                continue
+            mod = Module(str(fp), text, known)
+            modules.append(mod)
+            ctx.modules[str(fp)] = mod
+
+    findings: List[Finding] = []
+    for mod in modules:
+        if mod.parse_error is not None:
+            findings.append(mod.parse_error)
+        findings.extend(mod.directive_findings)
+
+    for rule in rules:
+        collect = getattr(rule, "collect", None)
+        if collect is not None:
+            for mod in modules:
+                if mod.tree is not None:
+                    collect(mod, ctx)
+    for rule in rules:
+        for mod in modules:
+            if mod.tree is None:
+                continue
+            for f in rule.check(mod, ctx):
+                if not mod.suppressed(f):
+                    findings.append(f)
+
+    base = load_baseline(baseline)
+    baseline_hits = 0
+    if base:
+        kept = []
+        for f in findings:
+            if f.key() in base:
+                baseline_hits += 1
+            else:
+                kept.append(f)
+        findings = kept
+
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return RunResult(findings, baseline_hits, len(modules))
+
+
+def analyze_source(source: str, path: str = "<fixture>",
+                   rules: Optional[Sequence[object]] = None) -> List[Finding]:
+    """Single-source entry point for tests: run all (or the given)
+    rules over one in-memory module, no baseline."""
+    if rules is None:
+        from .rules import ALL_RULES
+        rules = ALL_RULES
+    return run([path], rules, baseline=None, sources={path: source}).findings
+
+
+# ---------------------------------------------------------------------
+# shared AST helpers used by the rule modules
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """"a", "a.b.c", "self.cache" — or None for non-name expressions."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(node: ast.Call) -> Optional[str]:
+    return dotted_name(node.func)
+
+
+def keyword_arg(call: ast.Call, name: str) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def int_tuple(node: ast.AST) -> Optional[Tuple[int, ...]]:
+    """Literal int or tuple-of-ints, e.g. a donate_argnums value."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, ast.Tuple):
+        out = []
+        for elt in node.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, int):
+                out.append(elt.value)
+            else:
+                return None
+        return tuple(out)
+    return None
+
+
+def parent_map(tree: ast.AST) -> Dict[ast.AST, ast.AST]:
+    out: Dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            out[child] = node
+    return out

@@ -1,0 +1,21 @@
+"""Rule registry.  Each rule object exposes ``name``, ``description``,
+an optional ``collect(module, ctx)`` pre-pass and a
+``check(module, ctx) -> Iterable[Finding]`` pass."""
+from .donation import DonationRule
+from .hostsync import HostSyncRule
+from .ownership import OwnershipRule
+from .pallas import PallasRule
+from .retrace import RetraceRule
+
+ALL_RULES = [
+    DonationRule(),
+    OwnershipRule(),
+    RetraceRule(),
+    HostSyncRule(),
+    PallasRule(),
+]
+
+RULE_NAMES = tuple(r.name for r in ALL_RULES)
+
+__all__ = ["ALL_RULES", "RULE_NAMES", "DonationRule", "HostSyncRule",
+           "OwnershipRule", "PallasRule", "RetraceRule"]

@@ -1,0 +1,349 @@
+"""donation-discipline: use-after-donate detection.
+
+``jax.jit(..., donate_argnums=...)`` invalidates the donated argument
+buffers at the call — any later read of the same binding observes a
+deleted buffer (an error on TPU, silent aliasing hazards elsewhere).
+The engine's step callables are reached through factories
+(``_jit_steps`` is an ``lru_cache``'d factory returning a
+``(decode, prefill)`` tuple; ``_jit_copy`` caches per-width donating
+copies in a module dict), so the rule resolves donation specs through:
+
+* direct bindings: ``step = jax.jit(f, donate_argnums=(0, 1))``
+* factory returns: a function whose ``return`` is a donating
+  ``jax.jit`` call, a local bound to one (the ``_jit_copy`` dict-cache
+  shape), a tuple of donating jits, or a call to another known factory
+  (``self._steps()`` → ``_jit_steps`` resolves through the enclosing
+  class's method table)
+* immediate calls: ``_jit_copy(width)(cache, ...)``
+
+Within each function the rule tracks which bindings (locals and
+``self.x`` attribute chains) are dead after a donating call and flags
+any read before the binding is stored again.  Reassignment *from the
+jit result in the same statement* — the idiomatic pattern — revives
+the binding and never fires.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from ..core import (Finding, Module, RunContext, call_name, dotted_name,
+                    int_tuple, keyword_arg)
+
+# spec: ("single", positions) or ("tuple", (positions|None, ...))
+Spec = Tuple[str, tuple]
+
+
+def _jit_donate_positions(node: ast.AST) -> Optional[Tuple[int, ...]]:
+    """positions for a ``jax.jit(..., donate_argnums=...)`` call."""
+    if not isinstance(node, ast.Call):
+        return None
+    if call_name(node) not in ("jax.jit", "jit"):
+        return None
+    kw = keyword_arg(node, "donate_argnums")
+    if kw is None:
+        return None
+    return int_tuple(kw)
+
+
+def _own_statements(func: ast.AST) -> Iterable[ast.stmt]:
+    """Statements of ``func`` recursively, not descending into nested
+    function/class definitions."""
+    stack = list(getattr(func, "body", []))
+    while stack:
+        stmt = stack.pop(0)
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        yield stmt
+        for attr in ("body", "orelse", "finalbody"):
+            stack.extend(getattr(stmt, attr, []))
+        for h in getattr(stmt, "handlers", []):
+            stack.extend(h.body)
+
+
+class _ModuleIndex:
+    """Per-module factory/donor resolution tables."""
+
+    def __init__(self, mod: Module):
+        self.mod = mod
+        # plain function name -> FunctionDef; (class, method) -> FunctionDef
+        self.functions: Dict[str, ast.AST] = {}
+        self.methods: Dict[Tuple[str, str], ast.AST] = {}
+        self.enclosing_class: Dict[ast.AST, str] = {}
+        # resolved donation specs for factories / module-level donors
+        self.factory_specs: Dict[ast.AST, Spec] = {}
+        self.module_donors: Dict[str, Tuple[int, ...]] = {}
+        self._build()
+
+    def _build(self) -> None:
+        tree = self.mod.tree
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ClassDef):
+                for item in node.body:
+                    if isinstance(item, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                        self.methods[(node.name, item.name)] = item
+                        self.enclosing_class[item] = node.name
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.functions.setdefault(node.name, node)
+        # module-level direct donors: name = jax.jit(..., donate_argnums=..)
+        for stmt in tree.body:
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+                pos = _jit_donate_positions(stmt.value)
+                name = dotted_name(stmt.targets[0])
+                if pos is not None and name is not None:
+                    self.module_donors[name] = pos
+        # fixpoint over factory specs (factories may call factories)
+        all_funcs = list(self.functions.values()) + list(
+            self.methods.values())
+        for _ in range(6):
+            changed = False
+            for fn in all_funcs:
+                if fn in self.factory_specs:
+                    continue
+                spec = self._factory_spec(fn)
+                if spec is not None:
+                    self.factory_specs[fn] = spec
+                    changed = True
+            if not changed:
+                break
+
+    # -- factory spec resolution --------------------------------------
+
+    def resolve_callee(self, func_expr: ast.AST,
+                       cls: Optional[str]) -> Optional[ast.AST]:
+        """Resolve a call's func expression to a FunctionDef: plain
+        ``name(...)`` or ``self.name(...)`` within class ``cls``."""
+        name = dotted_name(func_expr)
+        if name is None:
+            return None
+        if name.startswith("self.") and cls is not None:
+            return self.methods.get((cls, name[5:]))
+        if "." not in name:
+            return self.functions.get(name)
+        return None
+
+    def _expr_spec(self, expr: ast.AST, local_jits: Dict[str, Spec],
+                   cls: Optional[str]) -> Optional[Spec]:
+        pos = _jit_donate_positions(expr)
+        if pos is not None:
+            return ("single", pos)
+        if isinstance(expr, ast.Name) and expr.id in local_jits:
+            return local_jits[expr.id]
+        if isinstance(expr, ast.Tuple):
+            parts: List[Optional[tuple]] = []
+            any_donating = False
+            for elt in expr.elts:
+                sub = self._expr_spec(elt, local_jits, cls)
+                if sub is not None and sub[0] == "single":
+                    parts.append(sub[1])
+                    any_donating = True
+                else:
+                    parts.append(None)
+            if any_donating:
+                return ("tuple", tuple(parts))
+            return None
+        if isinstance(expr, ast.Call):
+            target = self.resolve_callee(expr.func, cls)
+            if target is not None and target in self.factory_specs:
+                return self.factory_specs[target]
+        return None
+
+    def _factory_spec(self, fn: ast.AST) -> Optional[Spec]:
+        cls = self.enclosing_class.get(fn)
+        local_jits: Dict[str, Spec] = {}
+        returns: List[ast.Return] = []
+        for stmt in _own_statements(fn):
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+                name = dotted_name(stmt.targets[0])
+                spec = self._expr_spec(stmt.value, local_jits, cls)
+                if name is not None and spec is not None:
+                    local_jits[name] = spec
+            elif isinstance(stmt, ast.Return) and stmt.value is not None:
+                returns.append(stmt)
+        for ret in returns:
+            spec = self._expr_spec(ret.value, local_jits, cls)
+            if spec is not None:
+                return spec
+        return None
+
+
+class DonationRule:
+    name = "donation-discipline"
+    description = ("read of a jax.jit-donated buffer binding after the "
+                   "donating call, before reassignment (use-after-donate)")
+
+    def check(self, mod: Module, ctx: RunContext) -> Iterable[Finding]:
+        if mod.tree is None:
+            return []
+        index = _ModuleIndex(mod)
+        findings: List[Finding] = []
+        # every function body is an independent scope; module level too
+        scopes: List[Tuple[Optional[ast.AST], Sequence[ast.stmt]]] = [
+            (None, [s for s in mod.tree.body
+                    if not isinstance(s, (ast.FunctionDef,
+                                          ast.AsyncFunctionDef,
+                                          ast.ClassDef))])]
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                scopes.append((node, node.body))
+        for func, body in scopes:
+            self._check_scope(mod, index, func, body, findings)
+        return findings
+
+    # -- per-scope linear simulation ----------------------------------
+
+    def _check_scope(self, mod: Module, index: _ModuleIndex,
+                     func: Optional[ast.AST], body: Sequence[ast.stmt],
+                     findings: List[Finding]) -> None:
+        cls = index.enclosing_class.get(func) if func is not None else None
+        donors: Dict[str, Tuple[int, ...]] = dict(index.module_donors)
+        dead: Dict[str, Tuple[str, int]] = {}
+
+        def donating_positions(call: ast.Call) -> Optional[
+                Tuple[str, Tuple[int, ...]]]:
+            fname = dotted_name(call.func)
+            if fname is not None and fname in donors:
+                return fname, donors[fname]
+            # immediate call of a factory or inline jit:
+            #   _jit_copy(w)(cache, ...) / jax.jit(f, donate...)(x)
+            if isinstance(call.func, ast.Call):
+                inner = call.func
+                pos = _jit_donate_positions(inner)
+                if pos is not None:
+                    return call_name(inner) or "jax.jit(...)", pos
+                target = index.resolve_callee(inner.func, cls)
+                spec = index.factory_specs.get(target)
+                if spec is not None and spec[0] == "single":
+                    return (dotted_name(inner.func) or "<factory>",
+                            spec[1])
+            return None
+
+        def bind_from_value(targets: Sequence[ast.AST],
+                            value: ast.AST) -> None:
+            """Track donor bindings created by this assignment."""
+            spec = None
+            pos = _jit_donate_positions(value)
+            if pos is not None:
+                spec = ("single", pos)
+            elif isinstance(value, ast.Call):
+                target_fn = index.resolve_callee(value.func, cls)
+                spec = index.factory_specs.get(target_fn)
+            if spec is None:
+                return
+            if spec[0] == "single" and len(targets) == 1:
+                name = dotted_name(targets[0])
+                if name is not None:
+                    donors[name] = spec[1]
+            elif spec[0] == "tuple" and len(targets) == 1 and isinstance(
+                    targets[0], ast.Tuple):
+                for elt, part in zip(targets[0].elts, spec[1]):
+                    if part is None:
+                        continue
+                    name = dotted_name(elt)
+                    if name is not None:
+                        donors[name] = part
+
+        def loads_in(node: ast.AST) -> Iterable[Tuple[str, int]]:
+            for sub in ast.walk(node):
+                if isinstance(sub, (ast.Name, ast.Attribute)) and isinstance(
+                        getattr(sub, "ctx", None), ast.Load):
+                    name = dotted_name(sub)
+                    if name is not None:
+                        yield name, sub.lineno
+
+        def stores_in(stmt: ast.stmt) -> List[str]:
+            out: List[str] = []
+
+            def add_target(t: ast.AST) -> None:
+                if isinstance(t, (ast.Tuple, ast.List)):
+                    for elt in t.elts:
+                        add_target(elt)
+                    return
+                name = dotted_name(t)
+                if name is not None:
+                    out.append(name)
+
+            if isinstance(stmt, ast.Assign):
+                for t in stmt.targets:
+                    add_target(t)
+            elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+                add_target(stmt.target)
+            elif isinstance(stmt, ast.For):
+                add_target(stmt.target)
+            return out
+
+        def check_loads(node: ast.AST) -> None:
+            """Reads against bindings donated by earlier statements."""
+            if not dead:
+                return
+            for name, lineno in loads_in(node):
+                hit_key = name if name in dead else None
+                # "self.cache" dead also kills "self.cache.anything"
+                if hit_key is None:
+                    for d in dead:
+                        if name.startswith(d + "."):
+                            hit_key = d
+                            break
+                if hit_key is not None:
+                    callee, dline = dead.pop(hit_key)  # one report each
+                    via = "" if name == hit_key else f" (via '{name}')"
+                    findings.append(Finding(
+                        self.name, mod.path, lineno, "error",
+                        f"'{hit_key}' was donated to '{callee}' (line "
+                        f"{dline}) and read{via} before reassignment; "
+                        "rebind it from the jit result first"))
+
+        def apply_donations(node: ast.AST) -> None:
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Call):
+                    hit = donating_positions(sub)
+                    if hit is None:
+                        continue
+                    callee, positions = hit
+                    for p in positions:
+                        if p < len(sub.args):
+                            name = dotted_name(sub.args[p])
+                            if name is not None:
+                                dead[name] = (callee, sub.lineno)
+
+        COMPOUND = (ast.If, ast.For, ast.AsyncFor, ast.While, ast.With,
+                    ast.AsyncWith, ast.Try)
+
+        def visit(stmt: ast.stmt) -> None:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                return  # nested scopes analyzed independently
+            if isinstance(stmt, COMPOUND):
+                # only the header expressions execute before the body
+                headers: List[ast.AST] = []
+                if isinstance(stmt, (ast.If, ast.While)):
+                    headers = [stmt.test]
+                elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+                    headers = [stmt.iter]
+                elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+                    headers = [i.context_expr for i in stmt.items]
+                for h in headers:
+                    check_loads(h)
+                    apply_donations(h)
+                if isinstance(stmt, (ast.For, ast.AsyncFor)):
+                    name = dotted_name(stmt.target)
+                    if name is not None:
+                        dead.pop(name, None)
+                for attr in ("body", "orelse", "finalbody"):
+                    for s in getattr(stmt, attr, []):
+                        visit(s)
+                for handler in getattr(stmt, "handlers", []):
+                    for s in handler.body:
+                        visit(s)
+                return
+            check_loads(stmt)
+            apply_donations(stmt)
+            if isinstance(stmt, ast.Assign):
+                bind_from_value(stmt.targets, stmt.value)
+            for name in stores_in(stmt):
+                dead.pop(name, None)
+
+        for stmt in body:
+            visit(stmt)

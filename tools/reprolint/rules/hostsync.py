@@ -1,0 +1,93 @@
+"""host-sync-in-hot-path: device→host transfers in decode/pump loops.
+
+Functions marked ``# reprolint: hot`` (and their nested ``def``s) are
+the per-token/per-pass loops where an accidental
+``np.asarray``/``.item()``/``float()`` on a JAX value serializes the
+device pipeline.  The rule flags, inside hot functions only:
+
+* ``np.asarray`` / ``np.array`` / ``jax.device_get`` — unless the
+  argument is a host-side literal (list/tuple display or
+  comprehension), which builds an array *from* host data rather than
+  pulling one off the device;
+* zero-arg ``.item()`` / ``.tolist()`` / ``.block_until_ready()``;
+* ``float(...)`` / ``int(...)`` whose argument contains a ``jnp.*`` or
+  ``jax.*`` call (forcing the traced value to host).
+
+Deliberate syncs — the one host transfer per decode step — stay, with
+``# reprolint: disable=host-sync-in-hot-path -- <why>``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional
+
+from ..core import Finding, Module, RunContext, call_name
+
+_TRANSFER_CALLS = {"np.asarray", "np.array", "numpy.asarray",
+                   "numpy.array", "jax.device_get"}
+_SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+_HOST_LITERALS = (ast.List, ast.Tuple, ast.ListComp, ast.SetComp,
+                  ast.DictComp, ast.GeneratorExp, ast.Dict, ast.Set)
+
+
+def _contains_jax_call(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            name = call_name(sub)
+            if name is not None and (name.startswith("jnp.")
+                                     or name.startswith("jax.")):
+                return True
+    return False
+
+
+class HostSyncRule:
+    name = "host-sync-in-hot-path"
+    description = ("device->host sync (np.asarray / .item() / float() "
+                   "on a JAX value) inside a '# reprolint: hot' "
+                   "function; sanctioned syncs carry a justified "
+                   "suppression")
+
+    def check(self, mod: Module, ctx: RunContext) -> Iterable[Finding]:
+        findings: List[Finding] = []
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and mod.is_hot(node):
+                self._check_hot(mod, node, findings)
+        return findings
+
+    def _check_hot(self, mod: Module, fn: ast.AST,
+                   findings: List[Finding]) -> None:
+        def scan(node: ast.AST) -> None:
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                    continue  # nested hot defs are visited on their own
+                if isinstance(child, ast.Call):
+                    msg = self._sync_message(child)
+                    if msg is not None:
+                        findings.append(Finding(
+                            self.name, mod.path, child.lineno, "error",
+                            msg + " in hot function "
+                            f"'{fn.name}'; hoist it out of the loop or "
+                            "suppress with a justification if this is "
+                            "the deliberate sync point"))
+                scan(child)
+
+        scan(fn)
+
+    def _sync_message(self, call: ast.Call) -> Optional[str]:
+        name = call_name(call)
+        if name in _TRANSFER_CALLS:
+            if call.args and isinstance(call.args[0], _HOST_LITERALS):
+                return None  # building an array from host data
+            return f"'{name}' forces a device->host transfer"
+        if isinstance(call.func, ast.Attribute) \
+                and call.func.attr in _SYNC_METHODS \
+                and not call.args and not call.keywords:
+            return (f"'.{call.func.attr}()' blocks on a device->host "
+                    "sync")
+        if name in ("float", "int") and call.args \
+                and any(_contains_jax_call(a) for a in call.args):
+            return (f"'{name}(...)' on a JAX computation forces a "
+                    "device->host sync")
+        return None

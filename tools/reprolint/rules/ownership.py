@@ -1,0 +1,337 @@
+"""thread-ownership: declared ownership domains for engine/pool state.
+
+The pool's concurrency contract ("replica state strictly thread-private,
+results joined in replica order", pool.py) lives in annotations this
+rule enforces.  Classes declare:
+
+``_THREAD_OWNERSHIP = {"attr": domain, ...}``
+    * ``"replica-private"`` — owned by the replica's worker thread while
+      it runs; nothing may touch it through another object reference
+      from code that runs concurrently with workers.
+    * ``"join-only"`` — mutated only by the coordinator at/after the
+      join barrier; worker-side mutation is flagged.
+    * ``"shared-lock:<lockattr>"`` — every access must be inside
+      ``with self.<lockattr>:`` (``__init__`` is exempt: construction
+      happens-before publication).
+
+``_WORKER_METHODS = ("step", ...)``
+    Methods that run on worker threads.  The set is closed transitively
+    over ``self.x()`` calls: a helper called from a worker method is
+    worker code too.
+
+``_CONCURRENT_METHODS = ("step", ...)``
+    Coordinator methods during which worker threads are live (they
+    submit and join workers).  Checked for cross-object
+    replica-private access like worker methods, but **not** closed
+    transitively — their helpers run after the join barrier by
+    contract.
+
+Modules declare ``_MODULE_OWNERSHIP = {"_NAME": "shared-lock:_LOCK"}``
+for module-level shared state; all access outside ``with _LOCK:``
+(except the defining assignment) is flagged.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from ..core import Finding, Module, RunContext, dotted_name
+
+DOMAINS = ("replica-private", "join-only")
+_MUTATORS = frozenset({
+    "append", "extend", "add", "discard", "remove", "pop", "popitem",
+    "clear", "update", "setdefault", "insert", "appendleft", "extendleft",
+    "sort"})
+
+
+def _str_dict(node: ast.AST) -> Optional[Dict[str, str]]:
+    if not isinstance(node, ast.Dict):
+        return None
+    out: Dict[str, str] = {}
+    for k, v in zip(node.keys, node.values):
+        if (isinstance(k, ast.Constant) and isinstance(k.value, str)
+                and isinstance(v, ast.Constant)
+                and isinstance(v.value, str)):
+            out[k.value] = v.value
+        else:
+            return None
+    return out
+
+
+def _str_tuple(node: ast.AST) -> Optional[Tuple[str, ...]]:
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for elt in node.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                out.append(elt.value)
+            else:
+                return None
+        return tuple(out)
+    return None
+
+
+def _valid_domain(domain: str) -> bool:
+    return domain in DOMAINS or (domain.startswith("shared-lock:")
+                                 and len(domain) > len("shared-lock:"))
+
+
+class _ClassDecl:
+    def __init__(self, node: ast.ClassDef):
+        self.node = node
+        self.ownership: Dict[str, str] = {}
+        self.decl_line = node.lineno
+        self.worker_methods: Tuple[str, ...] = ()
+        self.concurrent_methods: Tuple[str, ...] = ()
+        self.methods: Dict[str, ast.AST] = {}
+        for item in node.body:
+            if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.methods[item.name] = item
+            elif isinstance(item, ast.Assign) and len(item.targets) == 1:
+                name = dotted_name(item.targets[0])
+                if name == "_THREAD_OWNERSHIP":
+                    self.ownership = _str_dict(item.value) or {}
+                    self.decl_line = item.lineno
+                elif name == "_WORKER_METHODS":
+                    self.worker_methods = _str_tuple(item.value) or ()
+                elif name == "_CONCURRENT_METHODS":
+                    self.concurrent_methods = _str_tuple(item.value) or ()
+
+    def worker_closure(self) -> Set[str]:
+        """Worker methods plus everything they reach via self.x()."""
+        out = set(self.worker_methods)
+        frontier = list(out)
+        while frontier:
+            m = frontier.pop()
+            fn = self.methods.get(m)
+            if fn is None:
+                continue
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Call):
+                    name = dotted_name(node.func)
+                    if (name is not None and name.startswith("self.")
+                            and "." not in name[5:]):
+                        callee = name[5:]
+                        if callee in self.methods and callee not in out:
+                            out.add(callee)
+                            frontier.append(callee)
+        return out
+
+
+def _iter_class_decls(mod: Module) -> Iterable[_ClassDecl]:
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.ClassDef):
+            decl = _ClassDecl(node)
+            if decl.ownership or decl.worker_methods or \
+                    decl.concurrent_methods:
+                yield decl
+
+
+class _LockWalker:
+    """Walk a statement list tracking which lock expressions are held
+    (``with self._lock:`` / ``with _LOCK:``), invoking ``visit(node,
+    held)`` on every expression-level AST node."""
+
+    def __init__(self, visit):
+        self.visit = visit
+
+    def walk_stmts(self, stmts, held: Tuple[str, ...]) -> None:
+        for stmt in stmts:
+            self.walk(stmt, held)
+
+    def walk(self, node: ast.AST, held: Tuple[str, ...]) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            # nested defs may run later (callbacks); treat as no-lock
+            # context but keep scanning their bodies
+            for child in ast.iter_child_nodes(node):
+                self.walk(child, ())
+            return
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            acquired = []
+            for item in node.items:
+                name = dotted_name(item.context_expr)
+                if name is not None:
+                    acquired.append(name)
+                self.walk(item.context_expr, held)
+            inner = held + tuple(acquired)
+            self.walk_stmts(node.body, inner)
+            return
+        self.visit(node, held)
+        for child in ast.iter_child_nodes(node):
+            self.walk(child, held)
+
+
+class OwnershipRule:
+    name = "thread-ownership"
+    description = ("attribute access crossing a declared ownership "
+                   "domain (_THREAD_OWNERSHIP / _MODULE_OWNERSHIP): "
+                   "worker-side mutation of join-only state, lock-free "
+                   "access to shared-lock state, cross-object access "
+                   "to replica-private state while workers are live")
+
+    def collect(self, mod: Module, ctx: RunContext) -> None:
+        for decl in _iter_class_decls(mod):
+            for attr, domain in decl.ownership.items():
+                if domain == "replica-private":
+                    ctx.ownership_replica_private[attr] = decl.node.name
+
+    def check(self, mod: Module, ctx: RunContext) -> Iterable[Finding]:
+        findings: List[Finding] = []
+        self._check_module_ownership(mod, findings)
+        for decl in _iter_class_decls(mod):
+            self._check_class(mod, ctx, decl, findings)
+        return findings
+
+    # -- module-level shared state ------------------------------------
+
+    def _check_module_ownership(self, mod: Module,
+                                findings: List[Finding]) -> None:
+        decl_map: Dict[str, str] = {}
+        decl_line = 0
+        for stmt in mod.tree.body:
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                    and dotted_name(stmt.targets[0]) == "_MODULE_OWNERSHIP":
+                decl_map = _str_dict(stmt.value) or {}
+                decl_line = stmt.lineno
+        if not decl_map:
+            return
+        locks: Dict[str, str] = {}
+        for name, domain in decl_map.items():
+            if not domain.startswith("shared-lock:"):
+                findings.append(Finding(
+                    self.name, mod.path, decl_line, "error",
+                    f"_MODULE_OWNERSHIP[{name!r}]: unsupported domain "
+                    f"{domain!r} (module-level state must be "
+                    "'shared-lock:<LOCK>')"))
+                continue
+            locks[name] = domain.split(":", 1)[1]
+        if not locks:
+            return
+        # the defining top-level assignment is exempt
+        defining: Set[int] = set()
+        for stmt in mod.tree.body:
+            targets: List[ast.AST] = []
+            if isinstance(stmt, ast.Assign):
+                targets = list(stmt.targets)
+            elif isinstance(stmt, ast.AnnAssign):
+                targets = [stmt.target]
+            for t in targets:
+                if dotted_name(t) in locks:
+                    defining.add(id(stmt))
+
+        def visit(node: ast.AST, held: Tuple[str, ...]) -> None:
+            if isinstance(node, ast.Name) and node.id in locks:
+                if locks[node.id] not in held:
+                    findings.append(Finding(
+                        self.name, mod.path, node.lineno, "error",
+                        f"'{node.id}' is shared-lock state: access it "
+                        f"inside 'with {locks[node.id]}:' "
+                        "(declared in _MODULE_OWNERSHIP)"))
+
+        walker = _LockWalker(visit)
+        for stmt in mod.tree.body:
+            if id(stmt) in defining:
+                continue
+            walker.walk(stmt, ())
+
+    # -- class-level ownership ----------------------------------------
+
+    def _check_class(self, mod: Module, ctx: RunContext, decl: _ClassDecl,
+                     findings: List[Finding]) -> None:
+        for attr, domain in decl.ownership.items():
+            if not _valid_domain(domain):
+                findings.append(Finding(
+                    self.name, mod.path, decl.decl_line, "error",
+                    f"_THREAD_OWNERSHIP[{attr!r}]: unknown domain "
+                    f"{domain!r} (expected 'replica-private', "
+                    "'join-only' or 'shared-lock:<lockattr>')"))
+        shared: Dict[str, str] = {
+            a: d.split(":", 1)[1] for a, d in decl.ownership.items()
+            if d.startswith("shared-lock:") and _valid_domain(d)}
+        join_only = {a for a, d in decl.ownership.items()
+                     if d == "join-only"}
+        workers = decl.worker_closure()
+        concurrent = set(decl.concurrent_methods)
+
+        for mname, fn in decl.methods.items():
+            in_worker = mname in workers
+            in_concurrent = mname in concurrent
+            is_init = mname == "__init__"
+
+            def visit(node: ast.AST, held: Tuple[str, ...],
+                      _w=in_worker, _c=in_concurrent, _i=is_init) -> None:
+                # shared-lock self attrs: lock must be held everywhere
+                if (not _i and isinstance(node, ast.Attribute)
+                        and isinstance(node.value, ast.Name)
+                        and node.value.id == "self"
+                        and node.attr in shared):
+                    lock = "self." + shared[node.attr]
+                    if lock not in held:
+                        findings.append(Finding(
+                            self.name, mod.path, node.lineno, "error",
+                            f"'self.{node.attr}' is shared-lock state: "
+                            f"access it inside 'with {lock}:'"))
+                if _w:
+                    self._check_worker_node(mod, node, join_only,
+                                            findings)
+                if (_w or _c):
+                    self._check_cross_object(mod, ctx, node, findings)
+
+            _LockWalker(visit).walk_stmts(fn.body, ())
+
+    def _check_worker_node(self, mod: Module, node: ast.AST,
+                           join_only: Set[str],
+                           findings: List[Finding]) -> None:
+        def self_attr(n: ast.AST) -> Optional[str]:
+            # self.attr, possibly under a subscript (self.attr[i])
+            if isinstance(n, ast.Subscript):
+                n = n.value
+            if isinstance(n, ast.Attribute) and isinstance(
+                    n.value, ast.Name) and n.value.id == "self":
+                return n.attr
+            return None
+
+        flagged: Optional[Tuple[str, int, str]] = None
+        if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) else \
+                [node.target]
+            for t in targets:
+                attr = self_attr(t)
+                if attr in join_only:
+                    flagged = (attr, t.lineno, "assigned")
+        elif isinstance(node, ast.Delete):
+            for t in node.targets:
+                attr = self_attr(t)
+                if attr in join_only:
+                    flagged = (attr, t.lineno, "deleted")
+        elif isinstance(node, ast.Call) and isinstance(
+                node.func, ast.Attribute) and node.func.attr in _MUTATORS:
+            attr = self_attr(node.func.value)
+            if attr in join_only:
+                flagged = (attr, node.lineno,
+                           f"mutated via .{node.func.attr}()")
+        if flagged is not None:
+            attr, lineno, how = flagged
+            findings.append(Finding(
+                self.name, mod.path, lineno, "error",
+                f"'self.{attr}' is join-only state {how} from a "
+                "worker-thread method; mutate it at/after the join "
+                "barrier instead"))
+
+    def _check_cross_object(self, mod: Module, ctx: RunContext,
+                            node: ast.AST,
+                            findings: List[Finding]) -> None:
+        if not isinstance(node, ast.Attribute):
+            return
+        if node.attr not in ctx.ownership_replica_private:
+            return
+        base = dotted_name(node.value)
+        if base in ("self", "cls"):
+            return
+        owner = ctx.ownership_replica_private[node.attr]
+        findings.append(Finding(
+            self.name, mod.path, node.lineno, "error",
+            f"'.{node.attr}' is replica-private state of {owner}, "
+            f"accessed through '{base or '<expr>'}' while worker "
+            "threads may be live; route it through the owning "
+            "replica's worker or move it past the join barrier"))

@@ -1,0 +1,116 @@
+"""retrace-hazard: jit construction and cache-key hygiene.
+
+Two hazards, both of which melt the bounded-retrace contract (the
+bucket ladder caps distinct traced shapes; PR 5):
+
+1. ``jax.jit(...)`` called inside a loop or a hot (per-step/per-request)
+   function.  Every such call builds a fresh traced callable — the
+   compile cache is keyed by the callable object, so this retraces
+   every time.  Step callables belong in a cached factory
+   (``functools.lru_cache``'d like ``_jit_steps``, or a module-level
+   dict like ``_COPY_JITS``); functions decorated with ``lru_cache`` /
+   ``cache`` are exempt since the construction itself is cached.
+
+2. Unstable values flowing into jit/step-factory cache keys: an
+   f-string, list/dict/set display or comprehension, or ``list()`` /
+   ``dict()`` / ``set()`` call passed as an argument to an
+   ``lru_cache``'d function in the same module.  Unhashables raise at
+   runtime; per-call-unique strings silently defeat the cache and
+   unbound the retrace count.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Set
+
+from ..core import Finding, Module, RunContext, call_name, dotted_name
+
+_CACHE_DECORATORS = {"functools.lru_cache", "lru_cache",
+                     "functools.cache", "cache"}
+_UNSTABLE_BUILDERS = {"list", "dict", "set"}
+
+
+def _is_cache_decorated(fn: ast.AST) -> bool:
+    for dec in getattr(fn, "decorator_list", []):
+        name = dotted_name(dec.func if isinstance(dec, ast.Call) else dec)
+        if name in _CACHE_DECORATORS:
+            return True
+    return False
+
+
+def _unstable_arg(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.JoinedStr):
+        return "an f-string (per-call-unique cache key)"
+    if isinstance(node, (ast.List, ast.ListComp)):
+        return "a list (unhashable cache key)"
+    if isinstance(node, (ast.Dict, ast.DictComp)):
+        return "a dict (unhashable cache key)"
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return "a set (unhashable cache key)"
+    if isinstance(node, ast.GeneratorExp):
+        return "a generator (unhashable cache key)"
+    if isinstance(node, ast.Call) and call_name(node) in _UNSTABLE_BUILDERS:
+        return f"a {call_name(node)}() result (unhashable cache key)"
+    return None
+
+
+class RetraceRule:
+    name = "retrace-hazard"
+    description = ("jax.jit constructed per-call (in a loop or hot "
+                   "function) instead of via a cached step factory; "
+                   "unhashable or per-call-unique values into an "
+                   "lru_cache'd factory's cache key")
+
+    def check(self, mod: Module, ctx: RunContext) -> Iterable[Finding]:
+        findings: List[Finding] = []
+        cached_fns: Set[str] = set()
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and _is_cache_decorated(node):
+                cached_fns.add(node.name)
+
+        def scan(node: ast.AST, in_loop: bool, hot: bool,
+                 exempt: bool) -> None:
+            for child in ast.iter_child_nodes(node):
+                c_loop, c_hot, c_exempt = in_loop, hot, exempt
+                if isinstance(child, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                    # a new function scope: loop context resets, hotness
+                    # inherits, cache-decoration exempts the whole body
+                    c_loop = False
+                    c_hot = hot or mod.is_hot(child)
+                    c_exempt = _is_cache_decorated(child)
+                elif isinstance(child, (ast.For, ast.AsyncFor, ast.While)):
+                    c_loop = True
+                elif isinstance(child, ast.Call):
+                    self._check_call(mod, child, in_loop, hot, exempt,
+                                     cached_fns, findings)
+                scan(child, c_loop, c_hot, c_exempt)
+
+        scan(mod.tree, False, False, False)
+        return findings
+
+    def _check_call(self, mod: Module, node: ast.Call, in_loop: bool,
+                    hot: bool, exempt: bool, cached_fns: Set[str],
+                    findings: List[Finding]) -> None:
+        name = call_name(node)
+        if name in ("jax.jit", "jit") and not exempt and (in_loop or hot):
+            where = "inside a loop" if in_loop else "in a hot function"
+            findings.append(Finding(
+                self.name, mod.path, node.lineno, "error",
+                f"jax.jit constructed {where}: each call builds a fresh "
+                "traced callable and retraces; hoist it into a cached "
+                "step factory (lru_cache / module-level dict)"))
+            return
+        if name is None:
+            return
+        callee = name[5:] if name.startswith("self.") else name
+        if callee in cached_fns and "." not in callee:
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                why = _unstable_arg(arg)
+                if why is not None:
+                    findings.append(Finding(
+                        self.name, mod.path, arg.lineno, "error",
+                        f"'{callee}' is lru_cache'd but receives {why}; "
+                        "cache keys must be stable hashables or the "
+                        "retrace/compile count is unbounded"))
